@@ -1,0 +1,173 @@
+"""Small MLP classifier/regressor harness for the paper-claim benchmarks.
+
+The paper's CNN/BERT accuracy experiments (Fig. 3, Table 4, Figs. 11-12)
+compare *operator replacement strategies* on a trained network. An MLP
+stack of FC layers is the minimal faithful carrier for those comparisons
+(the paper itself treats conv as matmul via im2col): we train a dense MLP
+on the clustered-feature task (repro.data.ClusteredTask — inputs cluster
+exactly the way PQ assumes), then replace layers with PQ/MADDNESS/LUT-NN
+variants and measure accuracy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans, maddness, pq, quant
+from repro.core.amm import LUTConfig, Mode, lut_linear
+from repro.core.lut_layer import init_dense
+from repro.core.temperature import init_log_temperature, temperature
+from repro.data import ClusteredTask
+from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
+
+
+@dataclasses.dataclass
+class MLPSpec:
+    d_in: int = 64
+    width: int = 128
+    depth: int = 5                      # hidden linear layers
+    n_out: int = 10
+    lut: LUTConfig = dataclasses.field(default_factory=lambda: LUTConfig(k=16, v=8))
+
+
+def mlp_init(key, spec: MLPSpec):
+    dims = [spec.d_in] + [spec.width] * spec.depth + [spec.n_out]
+    keys = jax.random.split(key, len(dims) - 1)
+    return [init_dense(k, a, b) for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(params, x, *, spec: MLPSpec, modes=None, temps=None, bits=8):
+    """modes: per-layer None(dense) | 'pq' | 'maddness' | 'ste'."""
+    h = x
+    for i, p in enumerate(params):
+        mode = None if modes is None else modes[i]
+        has_pq = "centroids" in p or "tree" in p
+        if mode is None or not has_pq:
+            h = h @ p["w"]
+        elif mode == "ste":
+            tbl = pq.build_table(p["centroids"], p["w"])
+            tbl = quant.fake_quant(tbl, bits=bits)
+            d = pq.pairwise_sq_dists(pq.split_subvectors(h, spec.lut.v), p["centroids"])
+            enc = pq.ste_encode(d, temperature(p["log_t"]))
+            h = pq.lut_contract(enc, tbl)
+        elif mode == "pq":
+            tbl = pq.build_table(p["centroids"], p["w"], stop_weight_grad=False)
+            d = pq.pairwise_sq_dists(pq.split_subvectors(h, spec.lut.v), p["centroids"])
+            h = pq.lut_contract(pq.hard_encode(d), tbl)
+        elif mode == "maddness":
+            tbl = pq.build_table(p["protos"], p["w"], stop_weight_grad=False)
+            idx = maddness.maddness_encode(h, p["tree"], spec.lut.v)
+            h = pq.gather_lut(idx, tbl)
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def train_dense(key, spec: MLPSpec, task: ClusteredTask, *, steps=300, batch=256, lr=1e-3):
+    params = mlp_init(key, spec)
+    opt = AdamW(lr=lr, clip_norm=None)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        def loss_fn(p):
+            logits = mlp_apply(p, xb, spec=spec)
+            if task.regression:
+                return jnp.mean(jnp.abs(logits[:, 0] - yb))
+            lse = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, yb[:, None], 1)[:, 0]
+            return jnp.mean(lse - gold)
+
+        l, g = jax.value_and_grad(loss_fn)(params)
+        params, state, _ = opt.update(g, state, params)
+        return params, state, l
+
+    for i in range(steps):
+        b = task.sample(i, batch)
+        params, state, l = step(params, state, b["x"], b["y"])
+    return params
+
+
+def evaluate(params, spec: MLPSpec, task: ClusteredTask, *, modes=None, n=2048):
+    b = task.sample(10_000, n)
+    logits = mlp_apply(params, b["x"], spec=spec, modes=modes)
+    if task.regression:
+        return float(jnp.mean(jnp.abs(logits[:, 0] - b["y"])))      # MAE
+    return float(jnp.mean(jnp.argmax(logits, -1) == b["y"]))        # acc
+
+
+def attach_pq(key, params, spec: MLPSpec, task: ClusteredTask, layer_ids, *, kind="pq"):
+    """k-means (or MADDNESS tree) init for the given layers, from captured
+    layer inputs under the dense model."""
+    b = task.sample(20_000, 1024)
+    h = b["x"]
+    acts = []
+    for p in params:
+        acts.append(h)
+        h = jax.nn.relu(h @ p["w"]) if p is not params[-1] else h @ p["w"]
+    out = [dict(p) for p in params]
+    for li in layer_ids:
+        a = acts[li]
+        if kind == "maddness":
+            tree = maddness.fit_hash_trees(np.asarray(a), k=spec.lut.k, v=spec.lut.v)
+            out[li]["tree"] = tree
+            out[li]["protos"] = maddness.bucket_prototypes(
+                np.asarray(a), tree, k=spec.lut.k, v=spec.lut.v
+            )
+        else:
+            key, sub = jax.random.split(key)
+            out[li]["centroids"] = kmeans.kmeans_per_codebook(
+                sub, a, k=spec.lut.k, v=spec.lut.v
+            )
+            out[li]["log_t"] = init_log_temperature()
+    return out
+
+
+def finetune_softpq(key, params, spec: MLPSpec, task: ClusteredTask, layer_ids,
+                    *, steps=300, batch=256, lr=1e-3, temp_mode="learned", bits=8):
+    """Soft-PQ QAT fine-tune (paper section 3). temp_mode: learned|fixed|anneal."""
+    modes = [("ste" if i in layer_ids else None) for i in range(len(params))]
+    rules = SOFT_PQ_RULES if temp_mode == "learned" else ()
+    opt = AdamW(lr=lr, rules=rules, clip_norm=1.0)
+    frozen = lut_frozen_mask(params)
+    state = opt.init(params, frozen)
+
+    def loss_fn(p, xb, yb):
+        logits = mlp_apply(p, xb, spec=spec, modes=modes, bits=bits)
+        if task.regression:
+            return jnp.mean(jnp.abs(logits[:, 0] - yb))
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, yb[:, None], 1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    @jax.jit
+    def step(params, state, xb, yb, t_override):
+        p_used = params
+        if temp_mode != "learned":
+            p_used = [
+                (dict(p, log_t=jnp.log(t_override)) if "log_t" in p else p)
+                for p in params
+            ]
+        l, g = jax.value_and_grad(loss_fn)(p_used, xb, yb)
+        params, state, _ = opt.update(g, state, params, frozen)
+        return params, state, l
+
+    curve = []
+    for i in range(steps):
+        b = task.sample(i, batch)
+        if temp_mode == "anneal":
+            t_i = 1.0 * (0.1 / 1.0) ** (i / max(1, steps - 1))
+        else:
+            t_i = 1.0
+        params, state, l = step(params, state, b["x"], b["y"], jnp.asarray(t_i))
+        if i % 20 == 0 or i == steps - 1:
+            acc = evaluate(params, spec, task, modes=[
+                ("pq" if j in layer_ids else None) for j in range(len(params))
+            ])
+            curve.append((i, float(l), acc))
+    return params, curve

@@ -1,0 +1,142 @@
+"""Analytic irreducible-work model per (arch x shape x mode) cell.
+
+Defines the "useful" numerator of the roofline fraction reported in
+EXPERIMENTS.md:
+
+  fraction = max(useful_flops/peak, useful_bytes/HBM_bw) / max(t_c, t_m, t_l)
+
+useful_flops = the algorithm's own minimal compute:
+  * LUT sites:  N*(D*K + C*K*M_mxu) with M_mxu contraction on the one-hot
+    path charged at C*K (the TPU-native cost; DESIGN.md §2) — i.e. the LUT
+    algorithm run perfectly, plus
+  * attention/SSD mixing flops, embeddings/lm_head, and 3x for backward.
+
+useful_bytes = what MUST stream from HBM once per step:
+  * every parameter byte (int8 tables in LUT mode, bf16 dense otherwise)
+  * decode: the KV/SSM cache bytes for the batch
+  * activations are assumed cache-resident (ideal), so this is a lower
+    bound — fractions are conservative (real kernels re-read activations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.configs import SHAPES, ArchSpec, build_model, get_arch
+from repro.core.amm import Mode
+from repro.models.common import SiteCfg
+from repro.models.moe import ExpertSiteCfg
+
+PEAK = 197e12
+HBM = 819e9
+
+
+def _walk_sites(cfg_obj, mult: float, out: list):
+    import dataclasses as dc
+
+    if isinstance(cfg_obj, SiteCfg):
+        out.append(("site", cfg_obj, mult))
+        return
+    if isinstance(cfg_obj, ExpertSiteCfg):
+        out.append(("expert", cfg_obj, mult))
+        return
+    if dc.is_dataclass(cfg_obj):
+        for f in dc.fields(cfg_obj):
+            v = getattr(cfg_obj, f.name)
+            if dc.is_dataclass(v):
+                _walk_sites(v, mult, out)
+            elif isinstance(v, tuple):
+                for item in v:
+                    if (
+                        isinstance(item, tuple)
+                        and len(item) == 2
+                        and isinstance(item[0], int)
+                    ):
+                        _walk_sites(item[1], mult * item[0], out)
+
+
+def cell_useful(arch_name: str, shape: str, mode: str, n_chips: int) -> dict[str, float]:
+    arch = get_arch(arch_name)
+    sp = SHAPES[shape]
+    bundle = build_model(arch, Mode(mode))
+    sites: list = []
+    _walk_sites(bundle.cfg, 1.0, sites)
+
+    tokens = sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1)
+    ctx = sp.seq_len
+
+    flops = 0.0
+    pbytes = 0.0
+    for kind, s, mult in sites:
+        e = s.n_experts if kind == "expert" else 1
+        act_e = (arch.top_k / arch.n_experts) if kind == "expert" else 1.0
+        d, m = s.d_in, s.d_out
+        if s.mode == Mode.LUT_INFER:
+            c = d // s.lut.v
+            flops += mult * tokens * act_e * e * (2 * d * s.lut.k / e + 2 * c * s.lut.k * m) if kind == "expert" else \
+                     mult * tokens * (2 * d * s.lut.k + 2 * c * s.lut.k * m)
+            pbytes += mult * e * (c * s.lut.k * m + c * s.lut.k * s.lut.v * 4)
+        elif s.mode == Mode.LUT_TRAIN:
+            c = d // s.lut.v
+            # fwd: encode + contract + table rebuild; bwd ~ 2x fwd
+            fwd = tokens * act_e * e * (2 * d * s.lut.k / max(e, 1) + 2 * c * s.lut.k * m) \
+                if kind == "expert" else tokens * (2 * d * s.lut.k + 2 * c * s.lut.k * m)
+            rebuild = e * 2 * c * s.lut.k * s.lut.v * m
+            flops += mult * (3 * fwd + rebuild)
+            pbytes += mult * e * d * m * 4
+        else:  # dense
+            f1 = tokens * act_e * e * 2 * d * m if kind == "expert" else tokens * 2 * d * m
+            flops += mult * f1 * (3 if sp.kind == "train" else 1)
+            pbytes += mult * e * d * m * (4 if sp.kind == "train" else 2)
+
+    # sequence mixing (not LUT-replaceable)
+    if arch.n_heads:
+        n_attn = arch.n_layers if arch.family != "hybrid" else len(
+            range(arch.attn_every, arch.n_layers + 1, arch.attn_every)
+        )
+        if arch.family == "audio":
+            n_attn = arch.n_layers + arch.n_enc_layers
+        attn_ctx = ctx if sp.kind != "train" else sp.seq_len / 2
+        f_attn = 4 * tokens * attn_ctx * arch.n_heads * arch.d_head * n_attn
+        flops += f_attn * (3 if sp.kind == "train" else 1)
+    if arch.ssm_state:
+        di = arch.d_inner
+        h = di // arch.ssm_head_dim
+        f_ssd = tokens * (2 * di * arch.ssm_state * 2 + 2 * h * arch.ssm_head_dim * arch.ssm_state * 2)
+        flops += f_ssd * arch.n_layers * (3 if sp.kind == "train" else 1)
+
+    # embeddings / lm head
+    flops += tokens * 2 * arch.d_model * arch.vocab * (3 if sp.kind == "train" else 1)
+    pbytes += arch.vocab * arch.d_model * (4 if sp.kind == "train" else 2)
+    if not arch.tie_embeddings:
+        pbytes += arch.vocab * arch.d_model * (4 if sp.kind == "train" else 2)
+
+    # decode: cache streams once per step
+    cbytes = 0.0
+    if sp.kind == "decode":
+        b = sp.global_batch
+        if arch.n_heads and arch.family != "hybrid":
+            n_attn = arch.n_layers + (arch.n_enc_layers if arch.family == "audio" else 0)
+            cbytes += n_attn * b * ctx * arch.n_kv_heads * arch.d_head * 2 * 2
+        if arch.family == "hybrid":
+            n_inv = len(range(arch.attn_every, arch.n_layers + 1, arch.attn_every))
+            cbytes += n_inv * b * ctx * arch.n_kv_heads * arch.d_head * 2 * 2
+        if arch.ssm_state:
+            di = arch.d_inner
+            h = di // arch.ssm_head_dim
+            cbytes += arch.n_layers * b * h * arch.ssm_head_dim * arch.ssm_state * 4
+
+    # train: optimizer state + grads traffic (params read+write + m,v)
+    obytes = 0.0
+    if sp.kind == "train":
+        obytes = pbytes * 2  # moments; grads transient
+
+    useful_flops = flops / n_chips
+    useful_bytes = (pbytes + cbytes + obytes) / n_chips
+    t_useful = max(useful_flops / PEAK, useful_bytes / HBM)
+    return {
+        "useful_flops_per_dev": useful_flops,
+        "useful_bytes_per_dev": useful_bytes,
+        "t_useful_s": t_useful,
+    }

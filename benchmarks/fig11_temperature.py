@@ -1,0 +1,44 @@
+"""Paper Fig. 11: learned temperature > annealed > fixed t=1.
+
+Same soft-PQ fine-tune, three temperature strategies, accuracy curves.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks._mlp import MLPSpec, attach_pq, evaluate, finetune_softpq, train_dense
+from repro.data import ClusteredTask
+
+
+def main(steps: int = 240) -> None:
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+    spec = MLPSpec(d_in=64, width=128, depth=4, n_out=10)
+    task = ClusteredTask(d_in=spec.d_in, n_classes=10)
+    dense = train_dense(key, spec, task, steps=300)
+    layer_ids = list(range(1, spec.depth + 1))
+
+    curves = {}
+    finals = {}
+    for mode in ("learned", "fixed", "anneal"):
+        p0 = attach_pq(key, dense, spec, task, layer_ids, kind="pq")
+        _, curve = finetune_softpq(
+            key, p0, spec, task, layer_ids, steps=steps, temp_mode=mode
+        )
+        curves[mode] = curve
+        finals[mode] = curve[-1][2]
+
+    print("# Fig. 11 analog: temperature strategy vs accuracy during soft-PQ")
+    print("step," + ",".join(curves))
+    for row in zip(*curves.values()):
+        print(f"{row[0][0]}," + ",".join(f"{r[2]:.4f}" for r in row))
+    print("final," + ",".join(f"{finals[m]:.4f}" for m in curves))
+    print(f"claim_learned_best,{finals['learned'] >= max(finals['fixed'], finals['anneal']) - 0.01}")
+    print(f"fig11_temperature,{(time.time()-t0)*1e6:.0f},curves")
+
+
+if __name__ == "__main__":
+    main()

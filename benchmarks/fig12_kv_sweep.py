@@ -1,0 +1,48 @@
+"""Paper Fig. 12: centroid count K and sub-vector length V vs accuracy+FLOPs.
+
+More centroids -> better accuracy, more FLOPs; longer sub-vectors -> fewer
+FLOPs, worse accuracy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from benchmarks._mlp import MLPSpec, attach_pq, evaluate, finetune_softpq, train_dense
+from repro.core.amm import LUTConfig, dense_flops, lut_flops
+from repro.data import ClusteredTask
+
+
+def main(steps: int = 150) -> None:
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+    base_spec = MLPSpec(d_in=64, width=128, depth=3, n_out=10)
+    task = ClusteredTask(d_in=base_spec.d_in, n_classes=10)
+    dense = train_dense(key, base_spec, task, steps=300)
+    layer_ids = list(range(1, base_spec.depth + 1))
+
+    print("# Fig. 12 analog: (K, V) sweep")
+    print("K,V,acc,flops_ratio")
+    rows = {}
+    for k in (8, 16, 32):
+        for v in (4, 8, 16):
+            spec = dataclasses.replace(base_spec, lut=LUTConfig(k=k, v=v))
+            p0 = attach_pq(key, dense, spec, task, layer_ids, kind="pq")
+            p, _ = finetune_softpq(key, p0, spec, task, layer_ids, steps=steps)
+            acc = evaluate(p, spec, task, modes=[
+                ("pq" if i in layer_ids else None) for i in range(base_spec.depth + 1)
+            ])
+            fr = lut_flops(1, 128, 128, spec.lut) / dense_flops(1, 128, 128)
+            rows[(k, v)] = acc
+            print(f"{k},{v},{acc:.4f},{fr:.3f}")
+    # paper claims: acc increases with K, decreases with V
+    print(f"claim_more_centroids_help,{rows[(32, 8)] >= rows[(8, 8)] - 0.02}")
+    print(f"claim_longer_subvec_hurts,{rows[(16, 16)] <= rows[(16, 4)] + 0.02}")
+    print(f"fig12_kv_sweep,{(time.time()-t0)*1e6:.0f},sweep")
+
+
+if __name__ == "__main__":
+    main()

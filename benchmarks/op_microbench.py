@@ -1,0 +1,76 @@
+"""Paper Fig. 7 analog: per-operator cost, dense vs LUT-NN.
+
+Real TPU wall-clock is unavailable here, so this reports BOTH:
+  * measured CPU wall-clock of the XLA one-hot LUT path vs dense matmul
+    (honest but CPU-flavored), and
+  * the derived v5e roofline time per op (bytes/819GBps vs flops/197TFLOPs)
+    for dense-bf16 vs LUT-int8-table — the decode-regime byte advantage is
+    the paper's memory/latency claim transposed to TPU (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq, quant
+from repro.core.amm import LUTConfig
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+OPS = [
+    # (name, N, D, M, K, V)
+    ("bert_ffn_up", 512, 768, 3072, 16, 32),
+    ("llama3_qproj", 256, 4096, 4096, 16, 32),
+    ("llama3_ffn_gate", 256, 4096, 14336, 16, 32),
+]
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main() -> None:
+    t0 = time.time()
+    print("# Fig. 7 analog: per-op dense vs LUT")
+    print("op,cpu_dense_ms,cpu_lut_ms,tpu_roofline_dense_us,tpu_roofline_lut_us,decode_byte_ratio")
+    for name, n, d, m, k, v in OPS:
+        cfg = LUTConfig(k=k, v=v)
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (n, d), jnp.float32)
+        w = jax.random.normal(key, (d, m), jnp.float32)
+        P = jax.random.normal(key, (d // v, k, v))
+        qt = quant.quantize_table(pq.build_table(P, w, stop_weight_grad=False))
+
+        dense_fn = jax.jit(lambda x, w: x @ w)
+        def lut_fn(x, P, tq, ts):
+            tbl = (tq.astype(jnp.float32) * ts)
+            enc = pq.hard_encode(pq.pairwise_sq_dists(pq.split_subvectors(x, v), P))
+            return pq.lut_contract(enc, tbl)
+        lut_jit = jax.jit(lut_fn)
+
+        t_dense = _time(dense_fn, x, w) * 1e3
+        t_lut = _time(lut_jit, x, P, qt.q, qt.scale) * 1e3
+
+        # v5e roofline (decode regime: weight/table bytes dominate)
+        dense_bytes_ = d * m * 2 + (n * d + n * m) * 2
+        lut_bytes_ = (d // v) * k * m + (d // v) * k * v * 4 + (n * d + n * m) * 2
+        dense_flops_ = 2 * n * d * m
+        lut_flops_ = 2 * n * d * k + 2 * n * (d // v) * k * m   # one-hot MXU path
+        t_roof_dense = max(dense_bytes_ / HBM_BW, dense_flops_ / PEAK_FLOPS) * 1e6
+        t_roof_lut = max(lut_bytes_ / HBM_BW, lut_flops_ / PEAK_FLOPS) * 1e6
+        print(
+            f"{name},{t_dense:.2f},{t_lut:.2f},{t_roof_dense:.1f},{t_roof_lut:.1f},"
+            f"{(d * m * 2) / ((d // v) * k * m):.2f}"
+        )
+    print(f"op_microbench,{(time.time()-t0)*1e6:.0f},cpu+roofline")
+
+
+if __name__ == "__main__":
+    main()

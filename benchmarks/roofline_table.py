@@ -1,0 +1,69 @@
+"""EXPERIMENTS.md section Roofline source: aggregate results/dryrun JSONs
+into the per-(arch x shape x mesh) three-term roofline table with
+MODEL_FLOPS ratios."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1] / "results"
+RESULTS = _ROOT / "final" if (_ROOT / "final").exists() else _ROOT / "dryrun"
+
+
+def rows(suffix: str = "sp", tag: str | None = None):
+    out = []
+    pat = f"*__{suffix}__{tag}.json" if tag else f"*__{suffix}.json"
+    for f in sorted(RESULTS.glob(pat)):
+        r = json.loads(f.read_text())
+        if r.get("skipped"):
+            out.append({"arch": r["arch"], "shape": r["shape"], "skipped": r["skipped"]})
+            continue
+        ro = r["roofline"]
+        n_chips = 1
+        for d in r["mesh"]:
+            n_chips *= d
+        from benchmarks._useful import cell_useful
+
+        u = cell_useful(r["arch"], r["shape"], r["mode"], n_chips)
+        bound = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"], 1e-12)
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mode": r["mode"],
+            "mesh": "x".join(map(str, r["mesh"])),
+            "mem_gib": r["memory"]["total_hbm_bytes"] / 2**30,
+            "t_comp": ro["t_compute_s"], "t_mem": ro["t_memory_s"],
+            "t_coll": ro["t_collective_s"], "bottleneck": ro["bottleneck"],
+            # useful-algorithm flops / compiled flops: >1 would mean the
+            # compiled program beats the analytic LUT algorithm (impossible);
+            # <<1 flags remat/redundancy waste
+            "model_flops_ratio": u["useful_flops_per_dev"] / max(ro["flops_per_device"], 1.0),
+            "roofline_fraction": u["t_useful_s"] / bound,
+        })
+    return out
+
+
+def main() -> None:
+    t0 = time.time()
+    for suffix, label in (("sp", "single-pod 16x16"), ("mp", "multi-pod 2x16x16")):
+        rs = rows(suffix)
+        if not rs:
+            continue
+        print(f"# Roofline table ({label})")
+        print("arch,shape,mode,mem_GiB,t_compute_s,t_memory_s,t_collective_s,"
+              "bottleneck,model_flops_ratio,roofline_fraction")
+        for r in rs:
+            if "skipped" in r:
+                print(f"{r['arch']},{r['shape']},SKIPPED({r['skipped'][:40]})")
+                continue
+            print(
+                f"{r['arch']},{r['shape']},{r['mode']},{r['mem_gib']:.2f},"
+                f"{r['t_comp']:.4f},{r['t_mem']:.4f},{r['t_coll']:.4f},"
+                f"{r['bottleneck']},{r['model_flops_ratio']:.3f},"
+                f"{r['roofline_fraction']:.4f}"
+            )
+    print(f"roofline_table,{(time.time()-t0)*1e6:.0f},from_dryrun_json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table4_accuracy   # one artifact
+
+Each module prints its table as CSV plus `name,us_per_call,derived` at the
+end. The dry-run roofline tables (EXPERIMENTS.md sections Dry-run/Roofline)
+are produced by benchmarks/roofline_table from results/dryrun/*.json.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table1_flops",
+    "fig3_layer_replacement",
+    "table4_accuracy",
+    "fig11_temperature",
+    "fig12_kv_sweep",
+    "fig13_replaced_layers",
+    "quant_ablation",
+    "op_microbench",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    failures = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        print(f"\n===== benchmarks.{name} =====")
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"[{name}: {time.time()-t0:.1f}s]")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Lower + compile one production cell on the 512-chip multi-pod mesh and
+print its memory/roofline analysis.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+"""
+
+import sys
+
+if __name__ == "__main__":
+    from repro.launch import dryrun
+
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3_1p7b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+    rec = dryrun.run_cell(arch, shape, multi_pod=True)
+    import json
+
+    print(json.dumps(rec, indent=2))

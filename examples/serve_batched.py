@@ -1,0 +1,13 @@
+"""Serving example: batched requests through the continuous-batching engine
+with int8 LUT tables (the paper's deployment mode).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.argv = ["serve", "--arch", "qwen3_1p7b", "--requests", "8", "--slots", "4"]
+    serve_main()

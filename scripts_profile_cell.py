@@ -1,0 +1,19 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "/root/repo/src")
+import json
+from repro.launch.dryrun import lower_cell
+from repro.roofline.hlo_cost import hotspots
+
+arch, shape = sys.argv[1], sys.argv[2]
+kw = json.loads(sys.argv[3]) if len(sys.argv) > 3 else {}
+rec, compiled = lower_cell(arch, shape, **kw)
+r = rec["roofline"]
+print(f"== {arch} x {shape} {kw} ==")
+print(f"mem/dev {rec['memory']['total_hbm_bytes']/2**30:.2f} GiB | "
+      f"t_comp {r['t_compute_s']:.3f}s t_mem {r['t_memory_s']:.3f}s t_coll {r['t_collective_s']:.3f}s -> {r['bottleneck']}")
+print("collectives by kind (GB/dev):", {k: round(v/1e9, 2) for k, v in r['collective_by_kind'].items()})
+print(f"{'op_name':70s} {'GFLOP':>9s} {'GB':>9s} {'collGB':>8s}")
+for name, c in hotspots(compiled.as_text(), top=22, depth=5):
+    print(f"{name[:70]:70s} {c.flops/1e9:9.1f} {c.bytes/1e9:9.2f} {c.coll_bytes/1e9:8.2f}")

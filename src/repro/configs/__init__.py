@@ -1,0 +1,476 @@
+"""Architecture registry: 10 assigned archs + the paper's BERT-base.
+
+Each `configs/<id>.py` defines `ARCH: ArchSpec` with the exact published
+dims. `build_model(arch, mode)` assembles the model (LM / hybrid / enc-dec)
+with every linear site resolved to dense or LUT per the paper's replacement
+policy; `input_specs(arch, shape)` produces ShapeDtypeStruct stand-ins for
+the four assigned input shapes (train_4k / prefill_32k / decode_32k /
+long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amm import LUTConfig, Mode
+from repro.models import attention as attn_mod
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import SiteCfg
+
+
+# ---------------------------------------------------------------------------
+# arch spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    act: str = "silu"
+    mlp_gated: bool = True
+    qk_norm: bool = False
+    use_bias: bool = False
+    causal: bool = True
+    rope_theta: float = 500_000.0
+    mrope_sections: tuple[int, ...] = ()
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_shared_expert: bool = False
+    moe_dense_residual: bool = False
+    moe_group_tokens: int = 1024        # routing-group size (section Perf M1)
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssd_chunk: int = 256
+    # hybrid
+    attn_every: int = 0
+    # enc-dec (audio)
+    n_enc_layers: int = 0
+    enc_frames: int = 0
+    takes_embeds: bool = False       # stub frontend provides embeddings
+    # LUT-NN settings (paper defaults: K=16, V aligned to site width, INT8)
+    lut_k: int = 16
+    lut_v: int = 32
+    lut_bits: int = 8
+    lut_int8_dot: bool = False          # integer one-hot contraction (section Perf)
+    lut_policy: str = "all_but_first"   # or "last_n:<n>" (BERT, Fig. 13), "all"
+    # scale/precision policy for the production dry-run
+    param_dtype: str = "float32"        # giants use bfloat16 (DESIGN.md section 5)
+    kv_cache_dtype: str = "bfloat16"    # "float8_e4m3fn" halves decode cache reads
+    sub_quadratic: bool = False         # eligible for long_500k
+    grad_accum: int = 1                 # microbatching for the train dry-run
+    notes: str = ""
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+
+# ---------------------------------------------------------------------------
+# shapes (assigned to all LM-family archs)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+ARCH_IDS = (
+    "mamba2_370m",
+    "llama3_8b",
+    "minitron_8b",
+    "qwen3_1p7b",
+    "command_r_35b",
+    "llama4_maverick_400b",
+    "arctic_480b",
+    "qwen2_vl_7b",
+    "whisper_tiny",
+    "zamba2_1p2b",
+)
+EXTRA_IDS = ("bert_base",)           # paper's own model, benchmarks only
+
+
+def get_arch(name: str) -> ArchSpec:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.ARCH
+
+
+def all_archs() -> list[ArchSpec]:
+    return [get_arch(n) for n in ARCH_IDS]
+
+
+def shape_applicable(arch: ArchSpec, shape: str) -> tuple[bool, str]:
+    """Whether a (arch, shape) cell runs; reason if skipped (DESIGN.md §4)."""
+    if shape == "long_500k" and not arch.sub_quadratic:
+        return False, "full-attention arch: 500k decode needs sub-quadratic mixing"
+    return True, ""
+
+
+def reduce_arch(arch: ArchSpec, **overrides: Any) -> ArchSpec:
+    """Shrink an arch to a CPU-smoke-testable config of the same family.
+
+    Keeps every structural feature (GQA ratio, qk-norm, MoE top-k, SSD,
+    shared block, enc-dec, M-RoPE) while cutting width/depth/vocab.
+    """
+    small: dict[str, Any] = dict(
+        n_layers=min(arch.n_layers, 4),
+        d_model=128,
+        d_ff=0 if arch.d_ff == 0 else 256,
+        vocab=512,
+        param_dtype="float32",
+        grad_accum=1,
+    )
+    if arch.n_heads:
+        small.update(n_heads=4, n_kv_heads=min(arch.n_kv_heads, 2) if arch.n_kv_heads < arch.n_heads else 4, d_head=32)
+    if arch.n_experts:
+        small.update(n_experts=4, top_k=arch.top_k)
+    if arch.ssm_state:
+        small.update(ssm_state=16, ssm_head_dim=16, ssd_chunk=8)
+    if arch.attn_every:
+        small.update(attn_every=2)
+    if arch.n_enc_layers:
+        small.update(n_enc_layers=2, enc_frames=8)
+    if arch.mrope_sections:
+        small.update(mrope_sections=(4, 6, 6))
+    small.update(lut_v=16)
+    small.update(overrides)
+    return dataclasses.replace(arch, **small)
+
+
+# ---------------------------------------------------------------------------
+# model assembly
+# ---------------------------------------------------------------------------
+
+def _lut(arch: ArchSpec, d_in: int) -> LUTConfig:
+    v = arch.lut_v
+    while d_in % v:
+        v //= 2
+    return LUTConfig(k=arch.lut_k, v=v, bits=arch.lut_bits, int8_dot=arch.lut_int8_dot)
+
+
+def _site(arch: ArchSpec, d_in: int, d_out: int, mode: Mode, name: str = "") -> SiteCfg:
+    return SiteCfg(d_in=d_in, d_out=d_out, mode=mode, lut=_lut(arch, d_in),
+                   bias=arch.use_bias, name=name)
+
+
+def _attn_cfg(arch: ArchSpec, mode: Mode, *, causal=None, cross=False) -> attn_mod.AttnCfg:
+    d, h, kv, dh = arch.d_model, arch.n_heads, arch.n_kv_heads, arch.d_head
+    return attn_mod.AttnCfg(
+        d_model=d, n_heads=h, n_kv_heads=kv, d_head=dh,
+        q=_site(arch, d, h * dh, mode, "attn/q"),
+        k=_site(arch, d, kv * dh, mode, "attn/k"),
+        v=_site(arch, d, kv * dh, mode, "attn/v"),
+        o=_site(arch, h * dh, d, mode, "attn/o"),
+        qk_norm=arch.qk_norm,
+        rope_theta=arch.rope_theta,
+        mrope_sections=arch.mrope_sections,
+        causal=arch.causal if causal is None else causal,
+        use_rope=not cross,
+    )
+
+
+def _mlp_cfg(arch: ArchSpec, mode: Mode) -> mlp_mod.MLPCfg:
+    d, f = arch.d_model, arch.d_ff
+    return mlp_mod.MLPCfg(
+        d_model=d, d_ff=f,
+        gate=_site(arch, d, f, mode, "mlp/gate"),
+        up=_site(arch, d, f, mode, "mlp/up"),
+        down=_site(arch, f, d, mode, "mlp/down"),
+        act=arch.act,
+        gated=arch.mlp_gated,
+    )
+
+
+def _moe_cfg(arch: ArchSpec, mode: Mode) -> moe_mod.MoECfg:
+    d, f, e = arch.d_model, arch.d_ff, arch.n_experts
+
+    def esite(d_in, d_out):
+        return moe_mod.ExpertSiteCfg(
+            n_experts=e, d_in=d_in, d_out=d_out, mode=mode, lut=_lut(arch, d_in)
+        )
+
+    return moe_mod.MoECfg(
+        d_model=d, d_ff=f, n_experts=e, top_k=arch.top_k,
+        router=_site(arch, d, e, Mode.DENSE),        # router stays exact
+        gate=esite(d, f), up=esite(d, f), down=esite(f, d),
+        shared=_mlp_cfg(arch, mode) if arch.moe_shared_expert else None,
+        act=arch.act,
+        group_tokens=arch.moe_group_tokens,
+    )
+
+
+def _mamba_block(arch: ArchSpec, mode: Mode) -> tf_mod.BlockCfg:
+    di = arch.d_inner
+    h = di // arch.ssm_head_dim
+    mcfg = mamba_mod.Mamba2Cfg(
+        d_model=arch.d_model, d_inner=di, n_heads=h, head_dim=arch.ssm_head_dim,
+        ssm_state=arch.ssm_state, n_groups=arch.ssm_groups,
+        conv_width=arch.conv_width, chunk=arch.ssd_chunk,
+        in_proj=_site(arch, arch.d_model,
+                      2 * di + 2 * arch.ssm_groups * arch.ssm_state + h, mode,
+                      "mamba/in_proj"),
+        out_proj=_site(arch, di, arch.d_model, mode, "mamba/out_proj"),
+    )
+    return tf_mod.BlockCfg(kind="mamba", d_model=arch.d_model, mamba=mcfg)
+
+
+def _block(arch: ArchSpec, mode: Mode) -> tf_mod.BlockCfg:
+    if arch.family == "ssm":
+        return _mamba_block(arch, mode)
+    if arch.family == "moe":
+        return tf_mod.BlockCfg(
+            kind="moe", d_model=arch.d_model,
+            attn=_attn_cfg(arch, mode),
+            moe=_moe_cfg(arch, mode),
+            residual_mlp=_mlp_cfg(arch, mode) if arch.moe_dense_residual else None,
+        )
+    return tf_mod.BlockCfg(
+        kind="dense", d_model=arch.d_model,
+        attn=_attn_cfg(arch, mode), mlp=_mlp_cfg(arch, mode),
+    )
+
+
+def _segments(arch: ArchSpec, mode: Mode) -> tuple[tuple[int, tf_mod.BlockCfg], ...]:
+    """Apply the paper's replacement policy as uniform-mode layer runs."""
+    L = arch.n_layers
+    if mode == Mode.DENSE or arch.lut_policy == "all":
+        return ((L, _block(arch, mode)),)
+    if arch.lut_policy == "all_but_first":
+        return ((1, _block(arch, Mode.DENSE)), (L - 1, _block(arch, mode)))
+    if arch.lut_policy.startswith("last_n:"):
+        n = int(arch.lut_policy.split(":")[1])
+        return ((L - n, _block(arch, Mode.DENSE)), (n, _block(arch, mode)))
+    raise ValueError(arch.lut_policy)
+
+
+# ---------------------------------------------------------------------------
+# unified model bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    arch: ArchSpec
+    mode: Mode
+    kind: str                    # "lm" | "hybrid" | "encdec"
+    cfg: Any
+
+    @property
+    def param_dtype(self):
+        return jnp.bfloat16 if self.arch.param_dtype == "bfloat16" else jnp.float32
+
+    def init(self, key: jax.Array):
+        if self.kind == "lm":
+            return tf_mod.lm_init(key, self.cfg, dtype=self.param_dtype)
+        if self.kind == "hybrid":
+            return hybrid_mod.hybrid_init(key, self.cfg, dtype=self.param_dtype)
+        return encdec_mod.encdec_init(key, self.cfg, dtype=self.param_dtype)
+
+    def param_specs(self, key: jax.Array | None = None):
+        k = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(self.init, k)
+
+    # ---------------- training ----------------
+    def loss(self, params, batch, *, compute_dtype=jnp.bfloat16):
+        if self.kind == "lm":
+            return tf_mod.lm_loss(self.cfg, params, batch, compute_dtype=compute_dtype)
+        if self.kind == "hybrid":
+            b, s = batch["labels"].shape
+            pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+            logits, _, _ = hybrid_mod.hybrid_apply(
+                self.cfg, params, tokens=batch["tokens"], pos=pos,
+                compute_dtype=compute_dtype,
+            )
+            from repro.models.common import cross_entropy
+
+            return cross_entropy(logits, batch["labels"])
+        # encdec
+        enc_out = encdec_mod.encode(self.cfg, params, batch["frames"],
+                                    compute_dtype=compute_dtype)
+        b, s = batch["labels"].shape
+        pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+        logits, _ = encdec_mod.decode(
+            self.cfg, params, tokens=batch["tokens"], pos=pos, enc_out=enc_out,
+            compute_dtype=compute_dtype,
+        )
+        from repro.models.common import cross_entropy
+
+        return cross_entropy(logits, batch["labels"])
+
+    # ---------------- serving ----------------
+    def init_caches(self, b: int, s_max: int, *, abstract=False, dtype=jnp.bfloat16):
+        if self.kind == "lm":
+            return tf_mod.init_caches(self.cfg, b, s_max, dtype, abstract=abstract)
+        if self.kind == "hybrid":
+            return hybrid_mod.hybrid_caches(self.cfg, b, s_max, dtype, abstract=abstract)
+        return encdec_mod.encdec_caches(self.cfg, b, s_max, dtype, abstract=abstract)
+
+    def forward_step(self, params, batch, caches, *, compute_dtype=jnp.bfloat16):
+        """One serving step (prefill if S>1, decode if S==1).
+
+        batch: tokens/embeds (+ optional frames for encdec prefill),
+        cache_len (B,). Returns (logits for the new positions, new caches).
+        """
+        cache_len = batch["cache_len"]
+        if self.kind == "encdec":
+            caches = dict(caches)
+            if "frames" in batch:                      # prefill: run encoder
+                enc_out = encdec_mod.encode(self.cfg, params, batch["frames"],
+                                            compute_dtype=compute_dtype)
+                caches["cross"] = jax.tree.map(
+                    lambda a: a.astype(compute_dtype),
+                    encdec_mod.cross_kv(self.cfg, params, enc_out),
+                )
+            b, s = batch["tokens"].shape
+            pos = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            logits, new_caches = encdec_mod.decode(
+                self.cfg, params, tokens=batch["tokens"], pos=pos,
+                caches=caches, cache_len=cache_len, compute_dtype=compute_dtype,
+            )
+            return logits, new_caches
+
+        if self.kind == "hybrid":
+            b, s = batch["tokens"].shape
+            pos = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            logits, new_caches, _ = hybrid_mod.hybrid_apply(
+                self.cfg, params, tokens=batch["tokens"], pos=pos,
+                caches=caches, cache_len=cache_len, compute_dtype=compute_dtype,
+            )
+            return logits, new_caches
+
+        tok = batch.get("tokens")
+        emb = batch.get("embeds")
+        ref = tok if tok is not None else emb
+        b, s = ref.shape[0], ref.shape[1]
+        pos = cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        if self.arch.mrope_sections:
+            pos = jnp.broadcast_to(pos[None], (3, b, s))
+        logits, new_caches, _ = tf_mod.lm_apply(
+            self.cfg, params, tokens=tok, embeds=emb, pos=pos,
+            caches=caches, cache_len=cache_len, compute_dtype=compute_dtype,
+        )
+        return logits, new_caches
+
+
+def build_model(arch: ArchSpec | str, mode: Mode | str = Mode.DENSE) -> ModelBundle:
+    if isinstance(arch, str):
+        arch = get_arch(arch)
+    if isinstance(mode, str):
+        mode = Mode(mode)
+
+    if arch.family == "hybrid":
+        d = arch.d_model
+        cfg = hybrid_mod.HybridCfg(
+            vocab=arch.vocab, d_model=d, n_layers=arch.n_layers,
+            attn_every=arch.attn_every,
+            mamba_block=_mamba_block(arch, mode),
+            shared_attn=_attn_cfg(arch, mode),
+            shared_mlp=_mlp_cfg(arch, mode),
+            fuse=_site(arch, 2 * d, d, Mode.DENSE),
+            out=_site(arch, d, d, mode),
+        )
+        return ModelBundle(arch=arch, mode=mode, kind="hybrid", cfg=cfg)
+
+    if arch.family == "audio":
+        enc_block = tf_mod.BlockCfg(
+            kind="dense", d_model=arch.d_model,
+            attn=_attn_cfg(arch, mode, causal=False),
+            mlp=_mlp_cfg(arch, mode),
+        )
+        cfg = encdec_mod.EncDecCfg(
+            vocab=arch.vocab, d_model=arch.d_model,
+            n_enc_layers=arch.n_enc_layers, n_dec_layers=arch.n_layers,
+            enc_frames=arch.enc_frames,
+            enc_block=enc_block,
+            dec_self=_attn_cfg(arch, mode, causal=True),
+            dec_cross=_attn_cfg(arch, mode, causal=False, cross=True),
+            dec_mlp=_mlp_cfg(arch, mode),
+        )
+        return ModelBundle(arch=arch, mode=mode, kind="encdec", cfg=cfg)
+
+    d = arch.d_model
+    cfg = tf_mod.LMCfg(
+        vocab=arch.vocab, d_model=d,
+        segments=_segments(arch, mode),
+        lm_head=None if arch.tie_embeddings else _site(arch, d, arch.vocab, Mode.DENSE),
+        takes_embeds=arch.takes_embeds,
+    )
+    return ModelBundle(arch=arch, mode=mode, kind="lm", cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: ArchSpec | str, shape: str) -> dict[str, Any]:
+    """Abstract model inputs for one (arch x shape) dry-run cell."""
+    if isinstance(arch, str):
+        arch = get_arch(arch)
+    sp = SHAPES[shape]
+    b, s = sp.global_batch, sp.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    if sp.kind == "train":
+        batch: dict[str, Any] = {"labels": tok(b, s)}
+        if arch.family == "vlm":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, arch.d_model), bf16)
+            batch["pos"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        elif arch.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((b, arch.enc_frames, arch.d_model), bf16)
+            batch["tokens"] = tok(b, s)
+        else:
+            batch["tokens"] = tok(b, s)
+        return batch
+
+    if sp.kind == "prefill":
+        batch = {"cache_len": jax.ShapeDtypeStruct((b,), i32)}
+        if arch.family == "vlm":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, arch.d_model), bf16)
+        elif arch.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct((b, arch.enc_frames, arch.d_model), bf16)
+            batch["tokens"] = tok(b, s)
+        else:
+            batch["tokens"] = tok(b, s)
+        return batch
+
+    # decode: one new token against a seq_len-deep cache
+    batch = {"cache_len": jax.ShapeDtypeStruct((b,), i32)}
+    if arch.family == "vlm":
+        batch["embeds"] = jax.ShapeDtypeStruct((b, 1, arch.d_model), bf16)
+    else:
+        batch["tokens"] = tok(b, 1)
+    return batch

@@ -1,0 +1,23 @@
+"""LUT-NN core: differentiable centroid learning + table-lookup AMM."""
+
+from repro.core.amm import LUTConfig, Mode, dense_bytes, dense_flops, lut_flops, lut_linear, lut_table_bytes
+from repro.core.lut_layer import (
+    deploy_param_specs,
+    deploy_params,
+    init_dense,
+    lut_train_params_from_dense,
+)
+
+__all__ = [
+    "LUTConfig",
+    "Mode",
+    "lut_linear",
+    "lut_flops",
+    "dense_flops",
+    "lut_table_bytes",
+    "dense_bytes",
+    "init_dense",
+    "lut_train_params_from_dense",
+    "deploy_params",
+    "deploy_param_specs",
+]

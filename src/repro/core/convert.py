@@ -1,0 +1,196 @@
+"""Dense -> LUT model conversion (the paper's offline pipeline, section 6.1).
+
+  1. graft: copy the trained dense model's weights into a freshly-built
+     LUT_TRAIN model (same arch, LUT replacement policy applied); replaced
+     layers keep their dense weight as the frozen table source.
+  2. k-means init: run the original model on ~1024 training samples with the
+     activation tape on, cluster every replaced site's inputs per codebook
+     (Eq. 1), write the centroids into the LUT params.
+  3. (after soft-PQ fine-tuning) deploy: build + int8-quantize the tables,
+     drop the dense weights -> the serving param tree.
+
+Wired end-to-end for the LM family (incl. BERT); the per-site primitives in
+repro.core.lut_layer are model-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelBundle, build_model
+from repro.core import kmeans, pq, quant
+from repro.core.amm import Mode
+from repro.models.common import tape_capture
+from repro.models import transformer as tf_mod
+
+
+def _flat_paths(tree: Any) -> dict[str, jax.Array]:
+    out = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[path] = leaf
+    return out
+
+
+def graft_dense_to_lut(dense_params: Any, lut_params: Any) -> Any:
+    """Copy every shared leaf (w/b/norm/embed) from the dense model into the
+    LUT_TRAIN tree. Segments are re-aligned by global layer index: the dense
+    model has one segment of L layers, the LUT model splits the same layers
+    into (dense-run, lut-run) segments."""
+    dflat = _flat_paths(dense_params)
+    lflat = _flat_paths(lut_params)
+
+    # global layer offset per lut segment
+    def seg_count(params, i):
+        return jax.tree.leaves(params["segments"][i])[0].shape[0]
+
+    n_lut_segs = len(lut_params["segments"])
+    offsets = []
+    off = 0
+    for i in range(n_lut_segs):
+        offsets.append(off)
+        off += seg_count(lut_params, i)
+
+    out = {}
+    for path, leaf in lflat.items():
+        if path in dflat and dflat[path].shape == leaf.shape:
+            out[path] = dflat[path]
+            continue
+        if path.startswith("segments/"):
+            parts = path.split("/")
+            seg_i = int(parts[1])
+            rest = "/".join(parts[2:])
+            src = dflat.get(f"segments/0/{rest}")
+            if src is not None and src.shape[1:] == leaf.shape[1:]:
+                lo = offsets[seg_i]
+                out[path] = src[lo : lo + leaf.shape[0]]
+                continue
+        out[path] = leaf        # centroids / log_t: keep init
+    leaves = [out[p] for p in lflat]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(lut_params), leaves)
+
+
+def kmeans_init_lut(
+    bundle_dense: ModelBundle,
+    dense_params: Any,
+    bundle_lut: ModelBundle,
+    lut_params: Any,
+    sample_batches: list[dict[str, jax.Array]],
+    key: jax.Array,
+    *,
+    kmeans_iters: int = 25,
+    max_rows: int = 4096,
+) -> Any:
+    """Capture replaced-site inputs under the ORIGINAL dense model (paper
+    section 6.1: the trained network on ~1024 samples) and k-means-init every
+    centroid table of the LUT model (Eq. 1)."""
+    assert bundle_lut.kind == "lm", "conversion wiring is LM-family (incl. BERT)"
+    cfg = dataclasses.replace(bundle_dense.cfg, unroll=True, remat=False)
+
+    tape = tape_capture(max_rows=max_rows)
+    with tape:
+        for batch in sample_batches:
+            b, s = batch["labels"].shape[:2]
+            pos = batch.get("pos")
+            if pos is None:
+                pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+                if bundle_dense.arch.mrope_sections:
+                    pos = jnp.broadcast_to(pos[None], (3, b, s))
+            tf_mod.lm_apply(
+                cfg, dense_params,
+                tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+                pos=pos, compute_dtype=jnp.float32,
+            )
+
+    # lut-model segment layout: map global layer index -> (segment, local)
+    seg_counts = [
+        jax.tree.leaves(seg)[0].shape[0] for seg in lut_params["segments"]
+    ]
+
+    def locate(global_j: int) -> tuple[int, int]:
+        off = 0
+        for i, c in enumerate(seg_counts):
+            if global_j < off + c:
+                return i, global_j - off
+            off += c
+        raise IndexError(global_j)
+
+    lflat = _flat_paths(lut_params)
+    updates: dict[str, jax.Array] = {}
+    for rec_path, rows_list in tape.records.items():
+        # dense capture path = segments/<dense_seg>/<global_j>/<site...>
+        parts = rec_path.split("/")
+        dense_seg, global_j = int(parts[1]), int(parts[2])
+        # dense model may itself have >1 segment: offset by preceding counts
+        dense_counts = [
+            jax.tree.leaves(seg)[0].shape[0] for seg in dense_params["segments"]
+        ]
+        global_j += sum(dense_counts[:dense_seg])
+        seg_i, local_j = locate(global_j)
+        site_path = "/".join(parts[3:])
+        leaf_path = f"segments/{seg_i}/{site_path}/centroids"
+        if leaf_path not in lflat:
+            continue                     # dense-mode segment: nothing to init
+        stacked = updates.get(leaf_path, lflat[leaf_path])
+        c, k, v = stacked.shape[1:]
+        acts = jnp.concatenate(rows_list, axis=0)
+        key, sub = jax.random.split(key)
+        cents = kmeans.kmeans_per_codebook(sub, acts, k=k, v=v, iters=kmeans_iters)
+        updates[leaf_path] = stacked.at[local_j].set(cents)
+
+    out = dict(lflat)
+    out.update(updates)
+    leaves = [out[p] for p in lflat]
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(lut_params), leaves)
+
+
+def convert_dense_to_lut_train(
+    bundle_dense: ModelBundle,
+    dense_params: Any,
+    sample_batches: list[dict[str, jax.Array]],
+    key: jax.Array,
+    **kw: Any,
+) -> tuple[ModelBundle, Any]:
+    """Full offline pipeline: dense model -> soft-PQ-trainable LUT model."""
+    bundle_lut = build_model(bundle_dense.arch, Mode.LUT_TRAIN)
+    lut_params = bundle_lut.init(jax.random.PRNGKey(0))
+    lut_params = graft_dense_to_lut(dense_params, lut_params)
+    lut_params = kmeans_init_lut(
+        bundle_dense, dense_params, bundle_lut, lut_params, sample_batches, key, **kw
+    )
+    return bundle_lut, lut_params
+
+
+def deploy_lut_train_params(bundle_lut: ModelBundle, lut_params: Any) -> tuple[ModelBundle, Any]:
+    """LUT_TRAIN params -> LUT_INFER params (int8 tables, weights dropped)."""
+    bundle_inf = build_model(bundle_lut.arch, Mode.LUT_INFER)
+    inf_params = jax.eval_shape(bundle_inf.init, jax.random.PRNGKey(0))
+    iflat = _flat_paths(inf_params)
+    tflat = _flat_paths(lut_params)
+
+    out: dict[str, jax.Array] = {}
+    for path, spec in iflat.items():
+        if path in tflat and tflat[path].shape == spec.shape:
+            out[path] = tflat[path]
+            continue
+        if path.endswith("table_q") or path.endswith("table_scale"):
+            base = path.rsplit("/", 1)[0]
+            P = tflat[f"{base}/centroids"]
+            W = tflat[f"{base}/w"]
+            stacked_q, stacked_s = [], []
+            for j in range(P.shape[0]):
+                t = pq.build_table(P[j], W[j], stop_weight_grad=False)
+                qt = quant.quantize_table(t, bits=8)
+                stacked_q.append(qt.q)
+                stacked_s.append(qt.scale)
+            out[f"{base}/table_q"] = jnp.stack(stacked_q)
+            out[f"{base}/table_scale"] = jnp.stack(stacked_s)
+        elif path not in out:
+            raise KeyError(f"no source for deployed param {path}")
+    leaves = [out[p] for p in iflat]
+    tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(inf_params), leaves)
+    return build_model(bundle_lut.arch, Mode.LUT_INFER), tree

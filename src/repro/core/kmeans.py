@@ -1,0 +1,93 @@
+"""jit-compiled k-means (Lloyd) with k-means++ seeding, for centroid init.
+
+The paper initializes soft-PQ centroids with k-means over activations sampled
+from the original model on ~1024 training samples (section 6.1). We vmap Lloyd
+over the C codebooks so a whole layer initializes in one XLA call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _sq_dists(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(N, V), (K, V) -> (N, K) squared distances, fp32."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    return (
+        jnp.sum(x * x, -1)[:, None]
+        - 2.0 * x @ c.T
+        + jnp.sum(c * c, -1)[None, :]
+    )
+
+
+def kmeans_plusplus(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding: (N, V) -> (K, V)."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = x[jax.random.randint(k0, (), 0, n)]
+
+    def body(carry, key_i):
+        centers, i, min_d = carry
+        # min_d holds distance to the closest already-chosen center.
+        p = min_d / jnp.maximum(jnp.sum(min_d), 1e-12)
+        idx = jax.random.choice(key_i, n, p=p)
+        c_new = x[idx]
+        centers = centers.at[i].set(c_new)
+        d_new = _sq_dists(x, c_new[None, :])[:, 0]
+        return (centers, i + 1, jnp.minimum(min_d, d_new)), None
+
+    centers0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(first)
+    min_d0 = _sq_dists(x, first[None, :])[:, 0]
+    (centers, _, _), _ = jax.lax.scan(
+        body, (centers0, 1, min_d0), jax.random.split(key, k - 1)
+    )
+    return centers
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key: jax.Array, x: jax.Array, *, k: int, iters: int = 25) -> tuple[jax.Array, jax.Array]:
+    """Lloyd's algorithm. x: (N, V) -> (centroids (K, V), inertia scalar).
+
+    Dead centroids (empty clusters) are reseeded to the point currently
+    farthest from its assigned centroid, which keeps all K codes live — the
+    LUT kernel assumes a dense codebook.
+    """
+    x = x.astype(jnp.float32)
+    init = kmeans_plusplus(key, x, k)
+
+    def step(centers, _):
+        d = _sq_dists(x, centers)                       # (N, K)
+        assign = jnp.argmin(d, -1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (N, K)
+        counts = jnp.sum(onehot, 0)                     # (K,)
+        sums = onehot.T @ x                             # (K, V)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # reseed empties at the globally worst-represented point
+        worst = x[jnp.argmax(jnp.min(d, -1))]
+        new = jnp.where((counts > 0)[:, None], new, worst[None, :])
+        return new, None
+
+    centers, _ = jax.lax.scan(step, init, None, length=iters)
+    inertia = jnp.sum(jnp.min(_sq_dists(x, centers), -1))
+    return centers, inertia
+
+
+@functools.partial(jax.jit, static_argnames=("k", "v", "iters"))
+def kmeans_per_codebook(
+    key: jax.Array, acts: jax.Array, *, k: int, v: int, iters: int = 25
+) -> jax.Array:
+    """Per-codebook k-means over layer activations.
+
+    acts: (N, D) activation samples -> centroids (C, K, V), C = D // v.
+    This is the paper's Eq. 1 objective, solved independently per codebook.
+    """
+    n, d = acts.shape
+    c = d // v
+    sub = acts.reshape(n, c, v).swapaxes(0, 1)          # (C, N, V)
+    keys = jax.random.split(key, c)
+    centroids, _ = jax.vmap(lambda kk, xx: kmeans(kk, xx, k=k, iters=iters))(keys, sub)
+    return centroids

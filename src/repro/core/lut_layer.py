@@ -1,0 +1,89 @@
+"""Initializers / converters for LUT linear layers.
+
+A "linear site" anywhere in a model is a dict pytree; these helpers create it
+in each of the three lifecycle stages:
+
+  dense weights --(collect activations, k-means, Eq.1)--> soft-PQ trainable
+  soft-PQ trainable --(build + int8-quantize table, Eq.3)--> deployed LUT
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans, pq, quant
+from repro.core.amm import LUTConfig
+from repro.core.temperature import init_log_temperature
+
+
+def init_dense(key: jax.Array, d: int, m: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None) -> dict[str, Any]:
+    """He/LeCun-style init for the dense baseline."""
+    s = scale if scale is not None else 1.0 / (d ** 0.5)
+    p = {"w": (jax.random.normal(key, (d, m), jnp.float32) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((m,), dtype)
+    return p
+
+
+def lut_train_params_from_dense(
+    key: jax.Array,
+    dense_params: dict[str, Any],
+    acts: jax.Array,
+    cfg: LUTConfig,
+    *,
+    kmeans_iters: int = 25,
+) -> tuple[dict[str, Any], dict[str, Any]]:
+    """k-means-initialize soft-PQ params from a dense layer + activation samples.
+
+    acts: (N, D) sampled inputs of this layer under the original model
+    (paper section 6.1: 1024 samples through the trained network).
+    Returns (trainable, frozen) param subtrees.
+    """
+    d = dense_params["w"].shape[0]
+    centroids = kmeans.kmeans_per_codebook(
+        key, acts.reshape(-1, d), k=cfg.k, v=cfg.v, iters=kmeans_iters
+    )
+    trainable = {"centroids": centroids, "log_t": init_log_temperature()}
+    frozen = dict(dense_params)
+    return trainable, frozen
+
+
+def deploy_params(
+    trainable: dict[str, Any], frozen: dict[str, Any], cfg: LUTConfig
+) -> dict[str, Any]:
+    """Materialize the inference LUT: int8 table + scales (drops the weight)."""
+    table = pq.build_table(trainable["centroids"], frozen["w"], stop_weight_grad=False)
+    qt = quant.quantize_table(
+        table, bits=cfg.bits, per_column=cfg.per_column, m_shared=cfg.int8_dot
+    )
+    out = {
+        "centroids": trainable["centroids"].astype(jnp.float32),
+        "table_q": qt.q,
+        "table_scale": qt.scale,
+    }
+    if "b" in frozen:
+        out["b"] = frozen["b"]
+    return out
+
+
+def deploy_param_specs(d: int, m: int, cfg: LUTConfig, *, bias: bool = False) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the deployed LUT params (dry-run use)."""
+    c = cfg.codebooks(d)
+    if cfg.int8_dot:
+        s_shape = (1, 1, m)
+    elif cfg.per_column:
+        s_shape = (c, 1, m)
+    else:
+        s_shape = (c, 1, 1)
+    specs = {
+        "centroids": jax.ShapeDtypeStruct((c, cfg.k, cfg.v), jnp.float32),
+        "table_q": jax.ShapeDtypeStruct((c, cfg.k, m), jnp.int8),
+        "table_scale": jax.ShapeDtypeStruct(s_shape, jnp.float32),
+    }
+    if bias:
+        specs["b"] = jax.ShapeDtypeStruct((m,), jnp.float32)
+    return specs

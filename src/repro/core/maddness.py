@@ -1,0 +1,113 @@
+"""MADDNESS baseline (Blalock & Guttag 2021) — hashing-based PQ encoding.
+
+The paper's Fig. 3b / Table 4 baseline: instead of argmin over Euclidean
+distances, each sub-vector is encoded by traversing a balanced binary
+regression tree (depth log2(K), one split dimension per level, per-node
+thresholds). Training is the greedy SSE-reduction heuristic; prototypes are
+bucket means with an optional global ridge refit. Encoding is NOT
+differentiable — which is exactly the failure mode LUT-NN's soft-PQ fixes.
+
+Tree fitting runs offline in numpy (it is data-dependent control flow);
+encoding is pure jnp and jit-friendly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HashTree(NamedTuple):
+    """Per-codebook balanced binary split trees.
+
+    split_dims : (C, L) int32      — split dimension per level
+    thresholds : (C, L, 2**(L-1))  — per-(level, bucket) thresholds (padded)
+    """
+
+    split_dims: jax.Array
+    thresholds: jax.Array
+
+    @property
+    def depth(self) -> int:
+        return self.split_dims.shape[-1]
+
+
+def _fit_tree_1cb(x: np.ndarray, depth: int) -> tuple[np.ndarray, np.ndarray]:
+    """Fit one codebook's tree on (N, V) sub-vectors. Greedy: at each level,
+    pick the dim whose bucket-median split removes the most SSE."""
+    n, v = x.shape
+    buckets = np.zeros(n, np.int64)
+    split_dims = np.zeros(depth, np.int32)
+    thresholds = np.zeros((depth, 2 ** (depth - 1)), np.float32)
+    for level in range(depth):
+        nb = 2**level
+        best_dim, best_gain = 0, -np.inf
+        best_th = np.zeros(nb, np.float32)
+        for dim in range(v):
+            gain, ths = 0.0, np.zeros(nb, np.float32)
+            col = x[:, dim]
+            for b in range(nb):
+                m = buckets == b
+                if m.sum() < 2:
+                    continue
+                cb = col[m]
+                th = np.median(cb)
+                ths[b] = th
+                lo, hi = cb[cb <= th], cb[cb > th]
+                sse_parent = ((cb - cb.mean()) ** 2).sum()
+                sse_kids = sum(((s - s.mean()) ** 2).sum() for s in (lo, hi) if len(s))
+                gain += sse_parent - sse_kids
+            if gain > best_gain:
+                best_dim, best_gain, best_th = dim, gain, ths
+        split_dims[level] = best_dim
+        thresholds[level, :nb] = best_th[:nb]
+        col = x[:, best_dim]
+        buckets = buckets * 2 + (col > thresholds[level, buckets]).astype(np.int64)
+    return split_dims, thresholds
+
+
+def fit_hash_trees(acts: np.ndarray, *, k: int, v: int) -> HashTree:
+    """acts: (N, D) activation samples -> trees for C = D // v codebooks."""
+    depth = int(np.log2(k))
+    if 2**depth != k:
+        raise ValueError(f"MADDNESS needs power-of-two K, got {k}")
+    n, d = acts.shape
+    c = d // v
+    sub = acts.reshape(n, c, v)
+    dims, ths = zip(*(_fit_tree_1cb(np.asarray(sub[:, i, :], np.float32), depth) for i in range(c)))
+    return HashTree(
+        split_dims=jnp.asarray(np.stack(dims)),
+        thresholds=jnp.asarray(np.stack(ths)),
+    )
+
+
+def maddness_encode(a: jax.Array, tree: HashTree, V: int) -> jax.Array:
+    """Hash-encode (N, D) -> int32 (N, C) bucket indices via tree traversal."""
+    n, d = a.shape
+    c = d // V
+    sub = a.reshape(n, c, V).astype(jnp.float32)
+    bucket = jnp.zeros((n, c), jnp.int32)
+    for level in range(tree.depth):                      # static L=log2(K) steps
+        dim = tree.split_dims[:, level]                  # (C,)
+        vals = jnp.take_along_axis(sub, dim[None, :, None], axis=2)[:, :, 0]  # (N, C)
+        th_lvl = tree.thresholds[:, level, :]            # (C, 2**(L-1))
+        th = jnp.take_along_axis(th_lvl[None, :, :], bucket[:, :, None], axis=2)[:, :, 0]
+        bucket = bucket * 2 + (vals > th).astype(jnp.int32)
+    return bucket
+
+
+def bucket_prototypes(acts: np.ndarray, tree: HashTree, *, k: int, v: int) -> jax.Array:
+    """Prototypes = per-bucket means (MADDNESS 'centroids'): (C, K, V)."""
+    idx = np.asarray(maddness_encode(jnp.asarray(acts), tree, v))   # (N, C)
+    n, d = acts.shape
+    c = d // v
+    sub = acts.reshape(n, c, v)
+    protos = np.zeros((c, k, v), np.float32)
+    for ci in range(c):
+        for b in range(k):
+            m = idx[:, ci] == b
+            protos[ci, b] = sub[m, ci].mean(0) if m.any() else sub[:, ci].mean(0)
+    return jnp.asarray(protos)

@@ -1,0 +1,75 @@
+"""Scalar quantization of lookup tables (paper section 3.3) + QAT.
+
+Symmetric range-based linear quantization  r = s * q, with
+s = max|r| / (2^(n-1) - 1) and zero-point fixed at 0. During soft-PQ training
+the forward pass sees the quantized table while the backward pass updates the
+real-valued table (straight-through), exactly as in the paper (Jacob et al.
+style QAT). At deployment the table is materialized as int8 (or int4-in-int8)
+plus a per-(codebook, column-block) fp32 scale.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedTable(NamedTuple):
+    """Deployed LUT: int8 codes + scales.
+
+    q     : (C, K, M) int8 codes (int4 also stored in int8, range [-7, 7])
+    scale : (C, 1, 1) or (C, 1, M) fp32 — per-codebook (paper) or per-column
+    """
+
+    q: jax.Array
+    scale: jax.Array
+
+    def dequant(self, dtype=jnp.bfloat16) -> jax.Array:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+def _qmax(bits: int) -> float:
+    return float(2 ** (bits - 1) - 1)
+
+
+def table_scale(
+    T: jax.Array, *, bits: int = 8, per_column: bool = False, m_shared: bool = False
+) -> jax.Array:
+    """Symmetric scale. Paper: one scale per table; per_column is our
+    finer-grained beyond-paper variant (free accuracy, same int8 bytes).
+    m_shared: one scale per OUTPUT column shared across codebooks,
+    (1, 1, M) — the layout that lets the deployed path run a single
+    int8 x int8 -> int32 MXU contraction over (C*K) and rescale once
+    (DESIGN.md section 2 / EXPERIMENTS.md section Perf, decode iteration)."""
+    if m_shared:
+        absmax = jnp.max(jnp.abs(T), axis=(0, 1), keepdims=True)  # (1, 1, M)
+    elif per_column:
+        absmax = jnp.max(jnp.abs(T), axis=1, keepdims=True)       # (C, 1, M)
+    else:
+        absmax = jnp.max(jnp.abs(T), axis=(1, 2), keepdims=True)  # (C, 1, 1)
+    return jnp.maximum(absmax.astype(jnp.float32), 1e-8) / _qmax(bits)
+
+
+def quantize_table(
+    T: jax.Array, *, bits: int = 8, per_column: bool = False, m_shared: bool = False
+) -> QuantizedTable:
+    scale = table_scale(T, bits=bits, per_column=per_column, m_shared=m_shared)
+    q = jnp.clip(jnp.round(T.astype(jnp.float32) / scale), -_qmax(bits), _qmax(bits))
+    return QuantizedTable(q=q.astype(jnp.int8), scale=scale)
+
+
+def fake_quant(
+    T: jax.Array, *, bits: int = 8, per_column: bool = False, m_shared: bool = False
+) -> jax.Array:
+    """QAT fake-quantization with a straight-through estimator.
+
+    forward : quantize-dequantize(T)   (what inference will see)
+    backward: identity                 (real-valued table keeps adjusting)
+    """
+    scale = table_scale(T, bits=bits, per_column=per_column, m_shared=m_shared)
+    t32 = T.astype(jnp.float32)
+    qdq = jnp.clip(jnp.round(t32 / scale), -_qmax(bits), _qmax(bits)) * scale
+    out = t32 + jax.lax.stop_gradient(qdq - t32)
+    return out.astype(T.dtype)

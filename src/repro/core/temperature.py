@@ -1,0 +1,24 @@
+"""Learned softmax temperature (paper section 3.2).
+
+The temperature is strictly positive, so it is parameterized in log space:
+t = exp(log_t), initialized at t=1 (log_t=0). Each replaced layer owns one
+scalar log_t, trained with its own (larger) learning rate — the optimizer's
+param-group machinery (repro.optim) matches the paper's centroid-lr vs
+temperature-lr split (Table 3: 1e-3/1e-4 vs 1e-1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TEMP_PARAM = "log_t"
+
+
+def init_log_temperature(init_t: float = 1.0) -> jax.Array:
+    return jnp.asarray(jnp.log(init_t), jnp.float32)
+
+
+def temperature(log_t: jax.Array, *, min_t: float = 1e-4) -> jax.Array:
+    """exp(log_t), floored for numeric safety as t -> 0 (argmax limit)."""
+    return jnp.maximum(jnp.exp(log_t.astype(jnp.float32)), min_t)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import ClusteredTask, MarkovLM, host_shard
+
+__all__ = ["MarkovLM", "ClusteredTask", "host_shard"]

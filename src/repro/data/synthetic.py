@@ -1,0 +1,111 @@
+"""Deterministic synthetic data with real statistical structure.
+
+Three generators sized so the paper's relative accuracy claims can be
+reproduced on one CPU core (DESIGN.md section 7.2):
+
+  * markov_lm     — token streams from a random sparse Markov chain: a real
+                    next-token-prediction task an LM can learn (loss drops
+                    well below uniform entropy).
+  * clustered_classification — mixture-of-Gaussians features pushed through
+                    a frozen random teacher MLP. Features cluster exactly the
+                    way PQ assumes (paper section 1: "features of different
+                    inputs have semantic similarity"), so LUT-vs-dense
+                    accuracy deltas are meaningful.
+  * clustered_regression — same features, scalar target (UTKFace-MAE
+                    analogue, paper Table 4).
+
+Everything is keyed by (seed, step) so any shard of any batch is
+reproducible from metadata alone — the restart path in the trainer relies
+on this instead of checkpointing the iterator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MarkovLM:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+    branching: int = 8          # successors per token: lower = more learnable
+
+    def _transitions(self) -> jax.Array:
+        key = jax.random.PRNGKey(self.seed)
+        succ = jax.random.randint(key, (self.vocab, self.branching), 0, self.vocab)
+        return succ
+
+    def batch_at(self, step: int) -> dict[str, jax.Array]:
+        succ = self._transitions()
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
+        k0, k1 = jax.random.split(key)
+        start = jax.random.randint(k0, (self.batch,), 0, self.vocab)
+        choice = jax.random.randint(k1, (self.batch, self.seq_len), 0, self.branching)
+
+        def walk(tok, ch):
+            nxt = succ[tok, ch]
+            return nxt, nxt
+
+        _, seq = jax.lax.scan(
+            lambda t, c: walk(t, c), start, choice.T
+        )
+        seq = seq.T                                              # (B, S)
+        tokens = jnp.concatenate([start[:, None], seq[:, :-1]], axis=1)
+        return {"tokens": tokens.astype(jnp.int32), "labels": seq.astype(jnp.int32)}
+
+    def __iter__(self) -> Iterator[dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusteredTask:
+    """Mixture-of-Gaussians features -> frozen teacher MLP -> labels."""
+
+    d_in: int = 64
+    n_classes: int = 10
+    n_clusters: int = 40
+    cluster_std: float = 0.35
+    teacher_width: int = 128
+    seed: int = 0
+    regression: bool = False
+
+    def _teacher(self):
+        key = jax.random.PRNGKey(self.seed)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        centers = jax.random.normal(k1, (self.n_clusters, self.d_in))
+        w1 = jax.random.normal(k2, (self.d_in, self.teacher_width)) / self.d_in**0.5
+        out_dim = 1 if self.regression else self.n_classes
+        w2 = jax.random.normal(k3, (self.teacher_width, out_dim)) / self.teacher_width**0.5
+        return centers, w1, w2
+
+    def sample(self, step: int, batch: int) -> dict[str, jax.Array]:
+        centers, w1, w2 = self._teacher()
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 7), step)
+        kc, kn = jax.random.split(key)
+        cid = jax.random.randint(kc, (batch,), 0, self.n_clusters)
+        x = centers[cid] + self.cluster_std * jax.random.normal(kn, (batch, self.d_in))
+        h = jnp.tanh(x @ w1) @ w2
+        if self.regression:
+            return {"x": x, "y": h[:, 0]}
+        return {"x": x, "y": jnp.argmax(h, axis=-1).astype(jnp.int32)}
+
+
+def host_shard(batch: dict, process_index: int, process_count: int) -> dict:
+    """Slice the global batch to this host's rows (multi-host data loading)."""
+    def cut(a):
+        if a.ndim == 0:
+            return a
+        per = a.shape[0] // process_count
+        return a[process_index * per : (process_index + 1) * per]
+
+    return jax.tree.map(cut, batch)

@@ -1,0 +1,66 @@
+"""Elastic scaling: re-map a training job onto a different device pool.
+
+On a real cluster this runs when nodes join/leave: the job checkpoints,
+the coordinator rebuilds the mesh from the surviving hosts, and training
+resumes with re-sharded state and a re-lowered step. All of that is
+mesh-shape arithmetic + the checkpointer's reshard-on-restore path, so it
+is fully exercisable on CPU host devices (tests/test_elastic.py scales a
+run 8 -> 4 devices mid-training and the loss curve continues seamlessly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.distributed.sharding import ShardingRules
+
+
+def best_mesh_shape(n_devices: int, *, prefer_model: int = 1) -> tuple[int, int]:
+    """(data, model) factorization for a surviving device count."""
+    model = prefer_model
+    while model > 1 and (n_devices % model or model > n_devices):
+        model //= 2
+    return n_devices // model, model
+
+
+@dataclasses.dataclass
+class ElasticContext:
+    """Everything that must be rebuilt when the device pool changes."""
+
+    mesh: jax.sharding.Mesh
+    rules: ShardingRules
+    step_fn: Callable          # freshly jitted for the new mesh
+
+    @classmethod
+    def build(
+        cls,
+        devices: list,
+        make_step: Callable[[jax.sharding.Mesh, ShardingRules], Callable],
+        *,
+        prefer_model: int = 1,
+        fsdp: bool = False,
+    ) -> "ElasticContext":
+        import numpy as np
+
+        data, model = best_mesh_shape(len(devices), prefer_model=prefer_model)
+        mesh = jax.sharding.Mesh(
+            np.asarray(devices[: data * model]).reshape(data, model),
+            ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+        rules = ShardingRules(mesh, fsdp=fsdp)
+        return cls(mesh=mesh, rules=rules, step_fn=make_step(mesh, rules))
+
+
+def rescale(
+    ckpt: Checkpointer,
+    like: Any,
+    new_ctx: ElasticContext,
+    shardings: Any,
+) -> tuple[int, Any]:
+    """Restore the latest checkpoint re-sharded for the new mesh."""
+    return ckpt.restore(like, shardings=shardings)

@@ -1,0 +1,221 @@
+"""Sharding rules: param/opt/cache/batch PartitionSpecs for the production mesh.
+
+Mesh axes (launch/mesh.py): ("data", "model") single-pod 16x16, or
+("pod", "data", "model") = (2, 16, 16) multi-pod. Pods are pure data
+parallel: the batch shards over ("pod", "data"); tensor/expert parallelism
+stays inside a pod (the "model" axis never crosses the pod boundary).
+
+Parallelism mapping (DESIGN.md section 5):
+  DP    batch axis of every input / cache over dp axes
+  TP    weight output (or input) dim over "model"; LUT tables column-sharded
+        over M — the one-hot contraction is column-parallel exactly like the
+        matmul it replaces; codebooks/centroids replicated (KBs)
+  EP    MoE expert dim over "model"
+  SP    KV caches sequence-sharded over "model" (flash-decoding style: the
+        softmax stats all-reduce is tiny, and it works for every head count,
+        unlike head sharding — see the uneven-sharding constraint)
+  FSDP  giant archs additionally shard weight/table dims over "data"
+  ZeRO-1 optimizer moments shard over "data" even when params don't
+
+Only dims divisible by the axis size are sharded (GSPMD-uneven shardings
+are rejected by jax for jit arguments); the rules pick the first divisible
+candidate dim and fall back to replication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    fsdp: bool = False           # shard weights over data too (ZeRO-3 style)
+    zero1: bool = True           # shard optimizer moments over data
+    row_parallel: bool = True    # Megatron row/column site roles (Perf T1)
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        s = 1
+        for a in self.dp_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape["model"]
+
+    # ------------------------------------------------------------------
+    def _dp_spec_entry(self):
+        axes = self.dp_axes
+        return axes if len(axes) > 1 else axes[0]
+
+    def batch_dim(self, b: int):
+        """Spec entry for a global-batch dim (None when batch=1, long_500k)."""
+        return self._dp_spec_entry() if b % self.dp_size == 0 else None
+
+    # ------------------------------------------------------------------
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """PartitionSpec for one parameter leaf (possibly layer-stacked)."""
+        tp = self.tp
+        name = path.split("/")[-1]
+        stacked = any(
+            seg in path for seg in ("segments/", "mamba_stack/", "encoder/", "decoder/")
+        )
+        off = 1 if stacked else 0
+        spec = [None] * len(shape)
+        eff = shape[off:]
+
+        def put(i_eff: int, axis) -> bool:
+            if spec[off + i_eff] is None and eff[i_eff] % _axsize(self.mesh, axis) == 0:
+                spec[off + i_eff] = axis
+                return True
+            return False
+
+        def put_fsdp(prefer: tuple[int, ...]):
+            if not self.fsdp:
+                return
+            dp = self._dp_spec_entry()
+            for i in prefer:
+                if spec[off + i] is None and eff[i] % self.dp_size == 0:
+                    spec[off + i] = dp
+                    return
+
+        # Megatron site roles: 'down'/'o'/'out_proj' consume the sharded
+        # output of a column-parallel producer -> shard their INPUT dim
+        # (weight rows / LUT codebook axis) so the only collective is the
+        # bf16 output psum, instead of GSPMD re-sharding the (N, C*K)
+        # encoding against an M-sharded table (section Perf, train iter 1).
+        parts = path.split("/")
+        parent = parts[-2] if len(parts) >= 2 else ""
+        row_parallel = self.row_parallel and parent in ("down", "o", "out_proj")
+
+        if name == "table" and len(eff) == 2:            # embedding (vocab, d)
+            put(0, "model") or put(1, "model")
+            put_fsdp((1, 0))
+        elif name == "w" and len(eff) == 2:              # linear (d_in, d_out)
+            if row_parallel:
+                put(0, "model") or put(1, "model")
+            else:
+                put(1, "model") or put(0, "model")
+            put_fsdp((0, 1) if not row_parallel else (1, 0))
+        elif name == "w" and len(eff) == 3:              # experts (E, d_in, d_out)
+            # 2D: expert-parallel over the data axes (tokens reach their
+            # expert via all-to-all) x tensor-parallel over model — giants
+            # fit WITHOUT the fsdp flag (section Perf, MoE iteration 2)
+            put(0, self._dp_spec_entry()) or put(0, "model")
+            if spec[off + 0] == self._dp_spec_entry():
+                put(2, "model") or put(1, "model")
+        elif name == "table_q" and len(eff) == 3:        # LUT (C, K, M)
+            if row_parallel:
+                put(0, "model") or put(2, "model")
+            else:
+                put(2, "model")
+            put_fsdp((0,) if not row_parallel else (2,))
+        elif name == "table_q" and len(eff) == 4:        # MoE LUT (E, C, K, M)
+            put(0, self._dp_spec_entry()) or put(0, "model")
+            if spec[off + 0] == self._dp_spec_entry():
+                put(3, "model")
+        elif name == "centroids" and len(eff) == 3 and row_parallel:
+            # codebook axis aligns with the C-sharded activations
+            put(0, "model")
+        elif name == "table_scale":
+            pass                                          # tiny: replicate
+        # other centroids / log_t / norms / conv / ssm scalars: replicate
+        return P(*spec)
+
+    def params_shardings(self, specs: Any) -> Any:
+        def mk(kp, leaf):
+            return NamedSharding(self.mesh, self.param_spec(_path(kp), leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(mk, specs)
+
+    # ------------------------------------------------------------------
+    def opt_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """Moments: same layout as the param, plus ZeRO-1 data sharding."""
+        if len(shape) == 1 and shape[0] == 0:            # frozen placeholder
+            return P()
+        if path.endswith("step"):
+            return P()
+        base = list(self.param_spec(path, shape))
+        base += [None] * (len(shape) - len(base))
+        dp = self._dp_spec_entry()
+        if self.zero1 and not self.fsdp and dp not in base:
+            for i, s in enumerate(base):
+                if s is None and shape[i] % self.dp_size == 0 and shape[i] > 1:
+                    base[i] = dp
+                    break
+        return P(*base)
+
+    def opt_shardings(self, opt_specs: Any) -> Any:
+        def mk(kp, leaf):
+            path = _path(kp)
+            # strip the AdamWState prefix ('m/...', 'v/...')
+            path = path.split("/", 1)[1] if "/" in path else path
+            return NamedSharding(self.mesh, self.opt_spec(path, leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(mk, opt_specs)
+
+    # ------------------------------------------------------------------
+    def cache_spec(self, path: str, shape: tuple[int, ...], batch: int) -> P:
+        """KV/SSM caches. Layer-stacked leading dim, then batch."""
+        name = path.split("/")[-1]
+        bspec = self.batch_dim(batch)
+        if name in ("k", "v") and len(shape) == 5:       # (L, B, S, KV, Dh)
+            seq = "model" if shape[2] % self.tp == 0 else None
+            return P(None, bspec, seq, None, None)
+        if name == "ssm":                                # (L, B, H, P, N)
+            hd = "model" if shape[2] % self.tp == 0 else None
+            return P(None, bspec, hd, None, None)
+        if name == "conv":                               # (L, B, W-1, ch)
+            ch = "model" if shape[3] % self.tp == 0 else None
+            return P(None, bspec, None, ch)
+        return P(*([None] * len(shape)))
+
+    def cache_shardings(self, cache_specs: Any, batch: int) -> Any:
+        def mk(kp, leaf):
+            return NamedSharding(
+                self.mesh, self.cache_spec(_path(kp), leaf.shape, batch)
+            )
+
+        return jax.tree_util.tree_map_with_path(mk, cache_specs)
+
+    # ------------------------------------------------------------------
+    def batch_shardings(self, batch_specs: dict[str, Any]) -> dict[str, Any]:
+        out = {}
+        for k, v in batch_specs.items():
+            shape = v.shape
+            if k == "pos" and len(shape) == 3:           # (3, B, S)
+                spec = P(None, self.batch_dim(shape[1]), None)
+            elif len(shape) >= 1:
+                spec = P(self.batch_dim(shape[0]), *([None] * (len(shape) - 1)))
+            else:
+                spec = P()
+            out[k] = NamedSharding(self.mesh, spec)
+        return out
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        s = 1
+        for a in axis:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[axis]
+
+
+def _path(keypath) -> str:
+    parts = []
+    for k in keypath:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))))
+    return "/".join(parts)

@@ -1,0 +1,137 @@
+"""Fused LUT-AMM Pallas TPU kernel: encode + table read + accumulate.
+
+TPU adaptation of the paper's section-5 inference design (see DESIGN.md §2):
+
+  * closest-centroid search  -> MXU dot(a_blk, P^T) per codebook block, with
+    the codebook block pinned in VMEM across the whole N sweep
+    (centroid-stationary: the BlockSpec index_map for `P` ignores the N grid
+    coordinate, so the pipeline emitter keeps the same tile resident).
+  * argmin                   -> VPU lane reduction (no sequential RAW hazard)
+  * shuffle-instruction read -> one-hot x table matmul on the MXU
+  * INT16/INT32 mixed accum  -> int8 table dequantized in-VMEM, fp32 MXU accum
+
+Grid = (N/bn, M/bm, C/bc) with the codebook axis innermost so the (bn, bm)
+output tile accumulates in place across codebook steps.
+
+VMEM working set per step:
+  x tile     bn * bc * V * 4
+  P tile     bc * K * V * 4
+  T tile     bc * K * bm   (int8)
+  out tile   bn * bm * 4
+Defaults (bn=256, bm=512, bc*V<=2048, K=16) stay under ~4 MB, leaving room
+for double buffering in 16 MB of VMEM. bn is a multiple of 8 (f32 sublane),
+bm a multiple of 128 (lane width), K=16 packs two one-hot groups per MXU
+128-lane contraction slice.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_amm_kernel(x_ref, p_ref, t_ref, s_ref, o_ref, *, n_c_blocks: int):
+    c_step = pl.program_id(2)
+
+    a = x_ref[...].astype(jnp.float32)          # (bn, bc, V)
+    p = p_ref[...].astype(jnp.float32)          # (bc, K, V)
+
+    # squared distances: batch over codebooks on the MXU
+    # (bc, bn, K) <- (bn, bc, V) x (bc, K, V)
+    cross = jax.lax.dot_general(
+        a, p,
+        dimension_numbers=(((2,), (2,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    a_nrm = jnp.sum(a * a, axis=-1).T[:, :, None]        # (bc, bn, 1)
+    p_nrm = jnp.sum(p * p, axis=-1)[:, None, :]          # (bc, 1, K)
+    dists = a_nrm - 2.0 * cross + p_nrm                  # (bc, bn, K)
+
+    # vectorized argmin over the K lane axis, then one-hot re-expansion
+    idx = jnp.argmin(dists, axis=-1)                     # (bc, bn)
+    k = dists.shape[-1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, dists.shape, 2)
+    onehot = (lanes == idx[:, :, None]).astype(jnp.float32)   # (bc, bn, K)
+
+    # dequantized table read as a one-hot MXU contraction
+    table = t_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    # (bc, bn, bm) <- (bc, bn, K) x (bc, K, bm)
+    part = jax.lax.dot_general(
+        onehot, table,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    acc = jnp.sum(part, axis=0)                          # (bn, bm)
+
+    @pl.when(c_step == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(c_step != 0)
+    def _accum():
+        o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_m", "block_c", "interpret"),
+)
+def lut_amm_pallas(
+    x: jax.Array,          # (N, D)
+    centroids: jax.Array,  # (C, K, V) fp32
+    table_q: jax.Array,    # (C, K, M) int8
+    scale: jax.Array,      # (C, 1, 1) or (C, 1, M) fp32
+    *,
+    block_n: int = 256,
+    block_m: int = 512,
+    block_c: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    n, d = x.shape
+    c, k, v = centroids.shape
+    m = table_q.shape[-1]
+    if d != c * v:
+        raise ValueError(f"D={d} != C*V={c}*{v}")
+
+    bn = min(block_n, n)
+    bm = min(block_m, m)
+    bc = block_c if block_c is not None else max(1, min(c, 2048 // v))
+    while c % bc:
+        bc -= 1
+
+    # pad N / M to block multiples (table M padding is cheap: int8 zeros)
+    pad_n, pad_m = (-n) % bn, (-m) % bm
+    xp = jnp.pad(x, ((0, pad_n), (0, 0))) if pad_n else x
+    tp = jnp.pad(table_q, ((0, 0), (0, 0), (0, pad_m))) if pad_m else table_q
+    sp = (
+        jnp.pad(scale, ((0, 0), (0, 0), (0, pad_m)))
+        if (pad_m and scale.shape[-1] != 1)
+        else scale
+    )
+    np_, mp_ = n + pad_n, m + pad_m
+
+    x_sub = xp.reshape(np_, c, v)
+    grid = (np_ // bn, mp_ // bm, c // bc)
+    s_m = 1 if scale.shape[-1] == 1 else bm
+
+    out = pl.pallas_call(
+        functools.partial(_lut_amm_kernel, n_c_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bc, v), lambda i, j, cc: (i, cc, 0)),
+            pl.BlockSpec((bc, k, v), lambda i, j, cc: (cc, 0, 0)),
+            pl.BlockSpec((bc, k, bm), lambda i, j, cc: (cc, 0, j)),
+            pl.BlockSpec(
+                (bc, 1, s_m),
+                (lambda i, j, cc: (cc, 0, j)) if s_m != 1 else (lambda i, j, cc: (cc, 0, 0)),
+            ),
+            ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, cc: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp_), jnp.float32),
+        interpret=interpret,
+    )(x_sub, centroids.astype(jnp.float32), tp, sp)
+
+    return out[:n, :m].astype(x.dtype)

@@ -1,0 +1,47 @@
+"""jit'd public wrappers for the LUT kernels with platform dispatch.
+
+`lut_amm` runs the fused Pallas kernel on TPU and transparently falls back to
+interpret mode elsewhere (this container is CPU-only: interpret=True executes
+the kernel body in Python for correctness validation; the XLA one-hot path in
+repro.core.pq is the production fallback used by the distributed dry-run).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.lut_amm import lut_amm_pallas
+from repro.kernels.ref import encode_ref, lut_amm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lut_amm(
+    x: jax.Array,
+    centroids: jax.Array,
+    table_q: jax.Array,
+    scale: jax.Array,
+    *,
+    block_n: int = 256,
+    block_m: int = 512,
+    block_c: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused LUT-NN approximate matmul: (N, D) -> (N, M)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return lut_amm_pallas(
+        x,
+        centroids,
+        table_q,
+        scale,
+        block_n=block_n,
+        block_m=block_m,
+        block_c=block_c,
+        interpret=interpret,
+    )
+
+
+__all__ = ["lut_amm", "lut_amm_ref", "encode_ref"]

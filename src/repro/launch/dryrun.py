@@ -1,0 +1,212 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: params, caches
+and inputs are ShapeDtypeStructs (zero allocation); `.lower().compile()`
+must succeed on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh;
+memory_analysis / cost_analysis / the optimized HLO feed EXPERIMENTS.md
+sections Dry-run and Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--mode ...]
+Results are appended to results/dryrun/<cell>.json.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    build_model,
+    get_arch,
+    input_specs,
+    shape_applicable,
+)
+from repro.core.amm import Mode
+from repro.distributed.sharding import ShardingRules
+from repro.launch.mesh import make_production_mesh
+from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
+from repro.optim.schedule import cosine_with_warmup
+from repro.roofline.analysis import analyze_compiled, memory_stats
+from repro.train.train_step import make_serve_step, make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _tree_bytes(tree) -> float:
+    return sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(tree)
+    )
+
+
+def _count_params(tree) -> int:
+    return int(sum(leaf.size for leaf in jax.tree.leaves(tree)))
+
+
+def lower_cell(
+    arch_name: str,
+    shape: str,
+    *,
+    multi_pod: bool = False,
+    mode: str | None = None,
+    fsdp: bool | None = None,
+    remat: bool | None = None,
+    arch_overrides: dict | None = None,
+    row_parallel: bool = True,
+):
+    """Lower+compile one cell; returns (record dict, compiled)."""
+    import dataclasses as _dc
+
+    arch = get_arch(arch_name)
+    if arch_overrides:
+        arch = _dc.replace(arch, **arch_overrides)
+    sp = SHAPES[shape]
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape, "skipped": why}, None
+
+    if mode is None:
+        mode = Mode.LUT_TRAIN if sp.kind == "train" else Mode.LUT_INFER
+    else:
+        mode = Mode(mode)
+    bundle = build_model(arch, mode)
+    if remat is not None and bundle.kind == "lm":
+        import dataclasses as dc
+
+        bundle = dc.replace(bundle, cfg=dc.replace(bundle.cfg, remat=remat))
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # 2D expert sharding replaced the fsdp default (section Perf, MoE iter 2:
+    # naive 2D weight sharding triggers SPMD involuntary rematerialization)
+    use_fsdp = bool(fsdp)
+    rules = ShardingRules(mesh, fsdp=use_fsdp, row_parallel=row_parallel)
+
+    params_specs = bundle.param_specs()
+    n_params = _count_params(params_specs)
+    p_shard = rules.params_shardings(params_specs)
+    batch_specs = input_specs(arch, shape)
+    b_shard = rules.batch_shardings(batch_specs)
+
+    t0 = time.time()
+    if sp.kind == "train":
+        opt = AdamW(
+            lr=cosine_with_warmup(1e-3, total_steps=10_000, warmup_steps=200),
+            rules=SOFT_PQ_RULES,
+            state_dtype=jnp.bfloat16 if arch.param_dtype == "bfloat16" else jnp.float32,
+        )
+        frozen = lut_frozen_mask(params_specs) if mode == Mode.LUT_TRAIN else None
+        opt_specs = jax.eval_shape(lambda p: opt.init(p, frozen), params_specs)
+        o_shard = rules.opt_shardings(opt_specs)
+        step_fn = make_train_step(
+            bundle, opt, frozen_mask=frozen, grad_accum=arch.grad_accum
+        )
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(params_specs, opt_specs, batch_specs)
+            compiled = lowered.compile()
+    else:
+        cache_b = sp.global_batch
+        cache_dtype = getattr(jnp, arch.kv_cache_dtype)
+        cache_specs = bundle.init_caches(cache_b, sp.seq_len, abstract=True, dtype=cache_dtype)
+        c_shard = rules.cache_shardings(cache_specs, cache_b)
+        step_fn = make_serve_step(bundle)
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, b_shard, c_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(2,),
+            ).lower(params_specs, batch_specs, cache_specs)
+            compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    roof = analyze_compiled(compiled)
+    mem = memory_stats(compiled)
+    rec = {
+        "arch": arch_name,
+        "shape": shape,
+        "mode": mode.value,
+        "mesh": list(mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "fsdp": use_fsdp,
+        "n_params": n_params,
+        "param_bytes_global": _tree_bytes(params_specs),
+        "compile_s": compile_s,
+        "memory": mem,
+        "roofline": roof.as_dict(),
+        "tokens_per_step": sp.global_batch * (sp.seq_len if sp.kind != "decode" else 1),
+    }
+    return rec, compiled
+
+
+def run_cell(arch_name: str, shape: str, **kw) -> dict:
+    tag = kw.pop("tag", "")
+    rec, _ = lower_cell(arch_name, shape, **kw)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    suffix = "mp" if kw.get("multi_pod") else "sp"
+    name = f"{arch_name}__{shape}__{suffix}" + (f"__{tag}" if tag else "")
+    (RESULTS / f"{name}.json").write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", choices=[m.value for m in Mode], default=None)
+    ap.add_argument("--fsdp", type=int, default=None)
+    args = ap.parse_args()
+
+    cells = (
+        [(a, s) for a in ARCH_IDS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = []
+    for arch_name, shape in cells:
+        try:
+            rec = run_cell(
+                arch_name,
+                shape,
+                multi_pod=args.multi_pod,
+                mode=args.mode,
+                fsdp=None if args.fsdp is None else bool(args.fsdp),
+            )
+            if rec.get("skipped"):
+                print(f"[skip] {arch_name} x {shape}: {rec['skipped']}")
+                continue
+            r = rec["roofline"]
+            print(
+                f"[ok] {arch_name} x {shape} ({rec['mode']}, mesh={rec['mesh']}) "
+                f"compile={rec['compile_s']:.1f}s "
+                f"mem/dev={rec['memory']['total_hbm_bytes']/2**30:.2f}GiB "
+                f"t_comp={r['t_compute_s']:.4f}s t_mem={r['t_memory_s']:.4f}s "
+                f"t_coll={r['t_collective_s']:.4f}s -> {r['bottleneck']}"
+            )
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            failures.append((arch_name, shape, repr(e)))
+            print(f"[FAIL] {arch_name} x {shape}: {e!r}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {[(a, s) for a, s, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Training launcher (end-to-end driver).
+
+Runs the full LUT-NN lifecycle on any registered arch at a CPU-feasible
+reduction, or lowers the production config when --dryrun is given:
+
+  dense pretrain -> convert (k-means init) -> soft-PQ QAT fine-tune ->
+  int8 deploy -> eval.
+
+Example (the (b) end-to-end driver; ~100M-param model for a few hundred
+steps):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_1p7b \
+      --d-model 512 --layers 8 --steps 300 --lut
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+from repro.core import convert
+from repro.data import MarkovLM
+from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
+from repro.optim.schedule import cosine_with_warmup
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ("bert_base",), default="qwen3_1p7b")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lut", action="store_true", help="run the full LUT pipeline")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    arch = reduce_arch(
+        get_arch(args.arch),
+        d_model=args.d_model,
+        n_layers=args.layers,
+        vocab=args.vocab,
+        d_ff=0 if get_arch(args.arch).d_ff == 0 else 2 * args.d_model,
+    )
+    data = MarkovLM(vocab=arch.vocab, seq_len=args.seq, batch=args.batch)
+    key = jax.random.PRNGKey(0)
+
+    bundle = build_model(arch, Mode.DENSE)
+    params = bundle.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{arch.name}: {n_params/1e6:.1f}M params, dense pretrain {args.steps} steps")
+
+    opt = AdamW(lr=cosine_with_warmup(3e-3, total_steps=args.steps, warmup_steps=20))
+    trainer = Trainer(
+        step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(
+            total_steps=args.steps, ckpt_every=max(50, args.steps // 4),
+            ckpt_dir=args.ckpt_dir, log_every=25,
+        ),
+    )
+    t0 = time.time()
+    params, _ = trainer.fit(params, opt.init(params), start_step=0)
+    print(f"dense done in {time.time()-t0:.1f}s, final loss {trainer.history[-1]['loss']:.4f}")
+
+    if not args.lut:
+        return
+
+    print("converting: k-means centroid init from activation samples ...")
+    samples = [data.batch_at(10_000 + i) for i in range(2)]
+    blut, lparams = convert.convert_dense_to_lut_train(bundle, params, samples, key)
+    frozen = lut_frozen_mask(lparams)
+    opt2 = AdamW(
+        lr=cosine_with_warmup(1e-3, total_steps=args.steps, warmup_steps=10),
+        rules=SOFT_PQ_RULES,
+    )
+    trainer2 = Trainer(
+        step_fn=jax.jit(
+            make_train_step(blut, opt2, frozen_mask=frozen, compute_dtype=jnp.float32)
+        ),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(
+            total_steps=args.steps, ckpt_every=max(50, args.steps // 4),
+            ckpt_dir=args.ckpt_dir + "_lut", log_every=25,
+        ),
+    )
+    lparams, _ = trainer2.fit(lparams, opt2.init(lparams, frozen), start_step=0)
+    print(f"soft-PQ fine-tune final loss {trainer2.history[-1]['loss']:.4f}")
+
+    binf, iparams = convert.deploy_lut_train_params(blut, lparams)
+    eval_loss = binf.loss(iparams, data.batch_at(99_999), compute_dtype=jnp.float32)
+    print(f"deployed INT8 LUT eval loss: {float(eval_loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Pure-JAX model zoo with LUT-NN-capable linear sites throughout."""

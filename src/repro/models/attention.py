@@ -1,0 +1,277 @@
+"""GQA attention with flash-style chunked softmax, KV cache, qk-norm, M-RoPE.
+
+Covers every attention-bearing assigned arch: llama3/minitron/command-r
+(GQA), qwen3 (GQA + qk_norm), llama4/arctic (GQA inside MoE stacks), qwen2-vl
+(M-RoPE), whisper (self + cross), zamba2 (shared MHA block).
+
+Score/AV contractions are NOT LUT-replaced (paper section 8: no weights);
+the Q/K/V/O projections are LUT sites.
+
+Attention over long sequences is computed blockwise with an online softmax
+(lax.scan over KV chunks) so the 32k-prefill dry-run never materializes an
+S x S score matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import Params, SiteCfg, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    q: SiteCfg
+    k: SiteCfg
+    v: SiteCfg
+    o: SiteCfg
+    qk_norm: bool = False
+    rope_theta: float = 1_000_000.0
+    mrope_sections: tuple[int, ...] = ()
+    causal: bool = True
+    use_rope: bool = True
+
+
+def attn_init(key: jax.Array, cfg: AttnCfg, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "q": linear_init(ks[0], cfg.q, dtype=dtype),
+        "k": linear_init(ks[1], cfg.k, dtype=dtype),
+        "v": linear_init(ks[2], cfg.v, dtype=dtype),
+        "o": linear_init(ks[3], cfg.o, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.d_head, dtype)
+        p["k_norm"] = rmsnorm_init(cfg.d_head, dtype)
+    return p
+
+
+def _rope(cfg: AttnCfg, x: jax.Array, pos: jax.Array) -> jax.Array:
+    if not cfg.use_rope:
+        return x
+    if cfg.mrope_sections:
+        return common.apply_mrope(x, pos, cfg.rope_theta, cfg.mrope_sections)
+    return common.apply_rope(x, pos, cfg.rope_theta)
+
+
+def _attend(
+    qc: jax.Array,      # (B, Sq, KV, G, Dh)
+    k: jax.Array,       # (B, T, KV, Dh)
+    v: jax.Array,       # (B, T, KV, Dh)
+    *,
+    q_pos: jax.Array,   # (B, Sq)
+    kv_pos: jax.Array,  # (B, T)
+    causal: bool,
+    kv_valid: jax.Array | None,
+) -> jax.Array:
+    """One q-block against the FULL KV extent.
+
+    The KV sequence axis may be sharded over the "model" mesh axis
+    (flash-decoding-style SP): the max/sum softmax reductions and the AV
+    contraction over T then lower to small (B,S,H)-sized all-reduces, which
+    GSPMD emits automatically — this is why we never lax.scan over the KV
+    axis (scanning a sharded axis forces SPMD full rematerialization).
+    """
+    pv, m, l = _attend_stats(
+        qc, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal, kv_valid=kv_valid
+    )
+    return pv / jnp.maximum(l, 1e-30)[..., None]            # (B, Sq, KV, G, Dh) f32
+
+
+def _attend_stats(
+    qc: jax.Array, k: jax.Array, v: jax.Array, *,
+    q_pos, kv_pos, causal, kv_valid,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unnormalized flash stats: (sum p*V, running max m, denom l)."""
+    b, sq, kvh, g, dh = qc.shape
+    sm = 1.0 / (dh ** 0.5)
+    # cached K/V may be stored sub-bf16 (fp8 KV cache, section Perf) —
+    # upcast at use; the convert fuses into the dot on TPU
+    k = k.astype(qc.dtype)
+    v = v.astype(qc.dtype)
+    sc = jnp.einsum(
+        "bskgd,btkd->bskgt", qc, k,
+        preferred_element_type=jnp.float32,
+    ) * sm                                                  # (B, Sq, KV, G, T)
+    mask = jnp.ones((b, 1, 1, 1, k.shape[1]), bool)
+    if causal:
+        mask = mask & (kv_pos[:, None, :] <= q_pos[:, :, None])[:, :, None, None, :]
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, None, None, :]
+    neg = jnp.asarray(-1e30, sc.dtype)
+    sc = jnp.where(mask, sc, neg)
+    m = jnp.max(sc, axis=-1)                                # (B, Sq, KV, G)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bskgt,btkd->bskgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return pv, m, l
+
+
+def _merge_stats(parts: list[tuple[jax.Array, jax.Array, jax.Array]]) -> jax.Array:
+    """Combine flash partials from disjoint KV sources (flash-decoding)."""
+    m = parts[0][1]
+    for _, mi, _ in parts[1:]:
+        m = jnp.maximum(m, mi)
+    acc = jnp.zeros_like(parts[0][0])
+    l = jnp.zeros_like(parts[0][2])
+    for pv, mi, li in parts:
+        corr = jnp.exp(mi - m)
+        acc = acc + pv * corr[..., None]
+        l = l + li * corr
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def flash_attention(
+    q: jax.Array,       # (B, S, Hq, Dh)
+    k: jax.Array,       # (B, T, KV, Dh)
+    v: jax.Array,       # (B, T, KV, Dh)
+    *,
+    q_pos: jax.Array,   # (B, S) int32 absolute positions
+    kv_pos: jax.Array,  # (B, T) int32 (entries > q_pos are masked when causal)
+    causal: bool,
+    kv_valid: jax.Array | None = None,  # (B, T) bool extra mask (cache fill)
+    q_chunk: int = 512,
+) -> jax.Array:
+    """Grouped-query attention, blocked over the *query* axis.
+
+    Scanning over Q (never KV) keeps every scanned axis unsharded; the score
+    matrix peak is B x q_chunk x H x T per step instead of B x S x H x T.
+    """
+    b, s, hq, dh = q.shape
+    kvh = k.shape[2]
+    g = hq // kvh
+    qg = q.reshape(b, s, kvh, g, dh)
+
+    nq = max(1, s // q_chunk)
+    while s % nq:
+        nq -= 1
+    qc_len = s // nq
+    if nq == 1:
+        out = _attend(qg, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal, kv_valid=kv_valid)
+        return out.reshape(b, s, hq, dh).astype(q.dtype)
+
+    q_blocks = qg.reshape(b, nq, qc_len, kvh, g, dh).swapaxes(0, 1)
+    pos_blocks = q_pos.reshape(b, nq, qc_len).swapaxes(0, 1)
+
+    def step(_, inp):
+        qb, pb = inp
+        return None, _attend(
+            qb, k, v, q_pos=pb, kv_pos=kv_pos, causal=causal, kv_valid=kv_valid
+        )
+
+    _, out = jax.lax.scan(step, None, (q_blocks, pos_blocks))
+    out = out.swapaxes(0, 1).reshape(b, s, hq, dh)
+    return out.astype(q.dtype)
+
+
+def init_cache(b: int, s_max: int, cfg: AttnCfg, dtype=jnp.bfloat16) -> Params:
+    return {
+        "k": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((b, s_max, cfg.n_kv_heads, cfg.d_head), dtype),
+    }
+
+
+def cache_specs(b: int, s_max: int, cfg: AttnCfg, dtype=jnp.bfloat16) -> Params:
+    return {
+        "k": jax.ShapeDtypeStruct((b, s_max, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jax.ShapeDtypeStruct((b, s_max, cfg.n_kv_heads, cfg.d_head), dtype),
+    }
+
+
+def attention(
+    cfg: AttnCfg,
+    p: Params,
+    x: jax.Array,                 # (B, S, D)
+    *,
+    pos: jax.Array,               # (B, S) or (3, B, S) for M-RoPE
+    cache: Params | None = None,
+    cache_len: jax.Array | None = None,  # (B,) tokens already in cache
+    x_kv: jax.Array | None = None,       # cross-attention memory (B, T, D)
+    kv_pos: jax.Array | None = None,
+    defer_cache_write: bool = False,
+) -> tuple[jax.Array, Params | None]:
+    """Returns (output (B, S, D), updated cache).
+
+    defer_cache_write (decode fast path, section Perf): attend over the
+    STALE cache and the fresh K/V slab as two flash partials and return
+    {"k_slab", "v_slab"} instead of a rewritten cache — the caller scatters
+    all layers' slabs into the stacked cache in one O(tokens) write, so the
+    per-layer functional cache copy disappears from the scan.
+    """
+    b, s, _ = x.shape
+    src = x if x_kv is None else x_kv
+    q = linear(cfg.q, p["q"], x).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = linear(cfg.k, p["k"], src).reshape(b, src.shape[1], cfg.n_kv_heads, cfg.d_head)
+    v = linear(cfg.v, p["v"], src).reshape(b, src.shape[1], cfg.n_kv_heads, cfg.d_head)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+
+    flat_pos = pos if pos.ndim == 2 else pos[0]   # (B, S) scalar stream for masks
+    q = _rope(cfg, q, pos)
+    if x_kv is None:
+        k = _rope(cfg, k, pos if kv_pos is None else kv_pos)
+
+    if cache is None:
+        out = flash_attention(
+            q, k, v,
+            q_pos=flat_pos,
+            kv_pos=flat_pos if kv_pos is None or kv_pos.ndim != 2 else kv_pos,
+            causal=cfg.causal,
+        )
+        new_cache = None
+    elif defer_cache_write:
+        # flash-decoding over (stale cache) + (fresh slab), no cache rewrite
+        s_max = cache["k"].shape[1]
+        kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(b, s, kvh, g, cfg.d_head)
+        all_pos = jnp.arange(s_max, dtype=jnp.int32)[None, :].repeat(b, 0)
+        stale_valid = all_pos < cache_len[:, None]
+        part_cache = _attend_stats(
+            qg, cache["k"], cache["v"],
+            q_pos=flat_pos, kv_pos=all_pos, causal=cfg.causal, kv_valid=stale_valid,
+        )
+        slab_pos = (cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :])
+        part_slab = _attend_stats(
+            qg, k, v, q_pos=flat_pos, kv_pos=slab_pos, causal=cfg.causal, kv_valid=None,
+        )
+        out = _merge_stats([part_cache, part_slab]).reshape(b, s, cfg.n_heads, cfg.d_head)
+        out = out.astype(q.dtype)
+        new_cache = {
+            "k_slab": k.astype(cache["k"].dtype),
+            "v_slab": v.astype(cache["v"].dtype),
+        }
+    else:
+        # scatter new K/V at per-sequence cursors, then attend over the cache
+        s_max = cache["k"].shape[1]
+        write_idx = (cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :])  # (B, S)
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        ck = cache["k"].at[bidx, write_idx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, write_idx].set(v.astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        all_pos = jnp.arange(s_max, dtype=jnp.int32)[None, :].repeat(b, 0)
+        valid = all_pos < (cache_len + s)[:, None]
+        out = flash_attention(
+            q, ck, cv,
+            q_pos=flat_pos,
+            kv_pos=all_pos,
+            causal=cfg.causal,
+            kv_valid=valid,
+        )
+
+    y = linear(cfg.o, p["o"], out.reshape(b, s, cfg.n_heads * cfg.d_head))
+    return y, new_cache

@@ -1,0 +1,209 @@
+"""Shared model building blocks (pure JAX, no flax).
+
+Parameters are plain nested dicts of arrays. Every weight-bearing projection
+in every architecture goes through `linear(...)` below, which dispatches to
+the dense path or the LUT-NN path (repro.core.amm) based on a statically
+resolved per-site mode — this is how the paper's technique is a first-class
+feature of the whole model zoo rather than a bolted-on op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amm import LUTConfig, Mode, lut_linear
+from repro.core.lut_layer import deploy_param_specs, init_dense
+from repro.core.temperature import init_log_temperature
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# linear sites (dense / LUT dual personality)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SiteCfg:
+    """Static config of one linear site, resolved at model build time."""
+
+    d_in: int
+    d_out: int
+    mode: Mode
+    lut: LUTConfig
+    bias: bool = False
+    name: str = ""          # tree-path-relative label for activation capture
+
+
+def linear_init(key: jax.Array, site: SiteCfg, *, dtype=jnp.float32) -> Params:
+    """Init params for a site in its current mode.
+
+    DENSE      -> {"w" [, "b"]}
+    LUT_TRAIN  -> {"w" (frozen via stop-grad in build_table), "centroids",
+                   "log_t" [, "b"]}  — centroids random here; k-means init is
+                   applied by repro.core.convert from activation samples.
+    LUT_INFER  -> {"centroids", "table_q", "table_scale" [, "b"]}
+    """
+    if site.mode == Mode.DENSE:
+        return init_dense(key, site.d_in, site.d_out, bias=site.bias, dtype=dtype)
+    if site.mode == Mode.LUT_TRAIN:
+        kd, kc = jax.random.split(key)
+        p = init_dense(kd, site.d_in, site.d_out, bias=site.bias, dtype=dtype)
+        c = site.lut.codebooks(site.d_in)
+        p["centroids"] = jax.random.normal(kc, (c, site.lut.k, site.lut.v), jnp.float32) * 0.02
+        p["log_t"] = init_log_temperature()
+        return p
+    if site.mode == Mode.LUT_INFER:
+        c = site.lut.codebooks(site.d_in)
+        kc = key
+        specs = deploy_param_specs(site.d_in, site.d_out, site.lut, bias=site.bias)
+        p = {
+            "centroids": jax.random.normal(kc, (c, site.lut.k, site.lut.v), jnp.float32) * 0.02,
+            "table_q": jax.random.randint(kc, specs["table_q"].shape, -127, 127, jnp.int8),
+            "table_scale": jnp.full(specs["table_scale"].shape, 0.02, jnp.float32),
+        }
+        if site.bias:
+            p["b"] = jnp.zeros((site.d_out,), dtype)
+        return p
+    raise ValueError(site.mode)
+
+
+_TAPE: list | None = None          # activation-capture tape (core.convert)
+
+
+class tape_capture:
+    """Context manager: record LUT-site inputs at every named linear call,
+    keyed by '<prefix>/<site.name>'. Only meaningful for eager, unrolled
+    forwards (conversion runs the sample batch un-jitted so the tape sees
+    concrete arrays; see LMCfg.unroll)."""
+
+    def __init__(self, max_rows: int = 4096):
+        self.records: dict[str, list] = {}
+        self.prefix: str = ""
+        self.max_rows = max_rows
+
+    def record(self, site, x):
+        if not site.name:
+            return
+        key = f"{self.prefix}/{site.name}" if self.prefix else site.name
+        rows = x.reshape(-1, x.shape[-1])[: self.max_rows]
+        self.records.setdefault(key, []).append(rows)
+
+    def __enter__(self):
+        global _TAPE
+        self._prev = _TAPE
+        _TAPE = self
+        return self
+
+    def __exit__(self, *exc):
+        global _TAPE
+        _TAPE = self._prev
+        return False
+
+
+def linear(site: SiteCfg, p: Params, x: jax.Array) -> jax.Array:
+    """Apply one linear site in its statically-configured mode."""
+    if _TAPE is not None:
+        _TAPE.record(site, x)
+    if site.mode == Mode.LUT_TRAIN:
+        # single-tree form: the dense weight lives next to the centroids and
+        # is frozen by the stop_gradient inside build_table.
+        return lut_linear(site.lut, Mode.LUT_TRAIN, p, x, frozen=p)
+    return lut_linear(site.lut, site.mode, p, x)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "relu2":                      # squared ReLU (Nemotron/Minitron)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    """(d_head/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh), pos: (B, S) int32 -> rotated x (same shape)."""
+    inv = rope_freqs(x.shape[-1], theta)                       # (Dh/2,)
+    ang = pos[:, :, None].astype(jnp.float32) * inv[None, None, :]  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, pos3: jax.Array, theta: float, sections: tuple[int, ...]
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): pos3 (3, B, S) = (t, h, w) position ids.
+
+    The Dh/2 frequency slots are partitioned into `sections` (summing to
+    Dh/2); each section rotates by its own positional stream.
+    """
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                                # (Dh/2,)
+    ang_k = pos3[:, :, :, None].astype(jnp.float32) * inv[None, None, None, :]  # (3, B, S, Dh/2)
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=dh // 2
+    )                                                          # (Dh/2,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_k, 0, -1),                            # (B, S, Dh/2, 3)
+        sec_id[None, None, :, None],
+        axis=-1,
+    )[..., 0]                                                  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / loss
+# ---------------------------------------------------------------------------
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token-level CE, fp32. logits (..., vocab), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

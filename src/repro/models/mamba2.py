@@ -1,0 +1,225 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) block in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (quadratic within Q-sized
+chunks, linear recurrence across chunks via lax.scan); decode is the O(1)
+recurrent state update — this is what makes the `long_500k` shape runnable
+for the SSM/hybrid archs while pure-attention archs are skipped.
+
+LUT-NN sites: in_proj and out_proj (the only static weight-activation
+contractions). The SSD scan itself is activation-activation (no weights) and
+is not LUT-replaceable — documented in DESIGN.md section 4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, SiteCfg, linear, linear_init, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Cfg:
+    d_model: int
+    d_inner: int           # expand * d_model
+    n_heads: int           # d_inner // head_dim
+    head_dim: int
+    ssm_state: int         # N
+    n_groups: int = 1      # B/C groups (GQA analogue)
+    conv_width: int = 4
+    chunk: int = 256
+    in_proj: SiteCfg = None   # d_model -> 2*d_inner + 2*G*N + H
+    out_proj: SiteCfg = None  # d_inner -> d_model
+
+    @property
+    def d_xbc(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.ssm_state
+
+    @property
+    def d_in_proj(self) -> int:
+        return 2 * self.d_inner + 2 * self.n_groups * self.ssm_state + self.n_heads
+
+
+def mamba2_init(key: jax.Array, cfg: Mamba2Cfg, *, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # dt bias: softplus^-1 of dt ~ U[1e-3, 1e-1]  (mamba2 reference init)
+    dt = jnp.exp(
+        jax.random.uniform(k3, (cfg.n_heads,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(1e-3))
+        + jnp.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": linear_init(k1, cfg.in_proj, dtype=dtype),
+        "out_proj": linear_init(k2, cfg.out_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(k4, (cfg.conv_width, cfg.d_xbc), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((cfg.d_xbc,), dtype),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(
+            jax.random.uniform(k5, (cfg.n_heads,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "norm": rmsnorm_init(cfg.d_inner, dtype),
+    }
+
+
+def _gated_rmsnorm(scale: jax.Array, y: jax.Array, z: jax.Array, eps: float = 1e-5) -> jax.Array:
+    y32 = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _causal_conv(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W. x: (B, S, Ch), w: (W, Ch)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) lower-tri decay exponents sum_{j<k<=i} dA_k."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # (..., i, j) = sum_(j,i]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,    # (B, S, H)  (already softplus'd, positive)
+    A: jax.Array,     # (H,)       (negative)
+    B_: jax.Array,    # (B, S, H, N) (already group-expanded)
+    C_: jax.Array,    # (B, S, H, N)
+    *,
+    chunk: int,
+    h0: jax.Array | None = None,   # (B, H, P, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, q, h).astype(f32)
+    bc = B_.reshape(b, nc, q, h, n).astype(f32)
+    cc = C_.reshape(b, nc, q, h, n).astype(f32)
+    dA = dtc * A[None, None, None, :]                 # (B, nc, Q, H)
+
+    seg = jnp.cumsum(dA, axis=2)                      # (B, nc, Q, H)
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(dA.swapaxes(2, 3)))           # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", cc, bc) * L
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # chunk summary states: decay from j to end of chunk
+    decay_out = jnp.exp(seg[:, :, -1:, :] - seg)      # (B, nc, Q, H)
+    states = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn", decay_out, dtc, bc, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(seg[:, :, -1, :])           # (B, nc, H)
+    init = jnp.zeros((b, h, p, n), f32) if h0 is None else h0.astype(f32)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp                                  # (B,H,P,N), (B,H)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    hfinal, hprevs = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    hprevs = hprevs.swapaxes(0, 1)                     # (B, nc, H, P, N)
+
+    decay_in = jnp.exp(seg)                            # (B, nc, Q, H)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", cc, hprevs, decay_in)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), hfinal
+
+
+def mamba2_cache_specs(b: int, cfg: Mamba2Cfg, dtype=jnp.bfloat16) -> Params:
+    return {
+        "conv": jax.ShapeDtypeStruct((b, cfg.conv_width - 1, cfg.d_xbc), dtype),
+        "ssm": jax.ShapeDtypeStruct((b, cfg.n_heads, cfg.head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba2_init_cache(b: int, cfg: Mamba2Cfg, dtype=jnp.bfloat16) -> Params:
+    return {
+        "conv": jnp.zeros((b, cfg.conv_width - 1, cfg.d_xbc), dtype),
+        "ssm": jnp.zeros((b, cfg.n_heads, cfg.head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba2(
+    cfg: Mamba2Cfg,
+    p: Params,
+    x: jax.Array,                  # (B, S, D)
+    *,
+    cache: Params | None = None,
+) -> tuple[jax.Array, Params | None]:
+    b, s, _ = x.shape
+    h, pd, n, g = cfg.n_heads, cfg.head_dim, cfg.ssm_state, cfg.n_groups
+    di = cfg.d_inner
+
+    zxbcdt = linear(cfg.in_proj, p["in_proj"], x)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, di + cfg.d_xbc], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is None or s > 1:
+        xbc_conv = jax.nn.silu(_causal_conv(p["conv_w"], p["conv_b"], xbc))
+        xs, bmat, cmat = jnp.split(xbc_conv, [di, di + g * n], axis=-1)
+        xs = xs.reshape(b, s, h, pd)
+        rep = h // g
+        bmat = jnp.repeat(bmat.reshape(b, s, g, n), rep, axis=2)
+        cmat = jnp.repeat(cmat.reshape(b, s, g, n), rep, axis=2)
+        y, hfinal = ssd_chunked(xs, dt, A, bmat, cmat, chunk=cfg.chunk)
+        if cache is None:
+            new_cache = None
+        else:
+            # prefill: hand the decode loop the final SSM state + conv tail
+            w1 = cfg.conv_width - 1
+            new_cache = {
+                "conv": xbc[:, -w1:, :].astype(cache["conv"].dtype),
+                "ssm": hfinal,
+            }
+    else:
+        # O(1) decode: roll the conv window, update the SSM state
+        assert s == 1
+        conv_in = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+        w = p["conv_w"]
+        xbc1 = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32), w.astype(jnp.float32))
+            + p["conv_b"].astype(jnp.float32)
+        )[:, None, :].astype(x.dtype)
+        xs, bmat, cmat = jnp.split(xbc1, [di, di + g * n], axis=-1)
+        xs = xs.reshape(b, h, pd)
+        rep = h // g
+        bmat = jnp.repeat(bmat.reshape(b, g, n), rep, axis=1).astype(jnp.float32)
+        cmat = jnp.repeat(cmat.reshape(b, g, n), rep, axis=1).astype(jnp.float32)
+        dt1 = dt[:, 0, :]                                          # (B, H)
+        decay = jnp.exp(dt1 * A[None, :])                          # (B, H)
+        hs = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt1, xs.astype(jnp.float32), bmat
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", hs, cmat)[:, None].astype(x.dtype)
+        y = y.reshape(b, 1, h, pd)
+        xs = xs[:, None]
+        new_cache = {"conv": conv_in[:, 1:], "ssm": hs}
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = _gated_rmsnorm(p["norm"]["scale"], y, z)
+    return linear(cfg.out_proj, p["out_proj"], y), new_cache

@@ -1,0 +1,42 @@
+"""Gated-linear-unit FFN (SwiGLU family). gate/up/down are LUT sites."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, SiteCfg, activation, linear, linear_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPCfg:
+    d_model: int
+    d_ff: int
+    gate: SiteCfg
+    up: SiteCfg
+    down: SiteCfg
+    act: str = "silu"
+    gated: bool = True
+
+
+def mlp_init(key: jax.Array, cfg: MLPCfg, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "up": linear_init(ks[1], cfg.up, dtype=dtype),
+        "down": linear_init(ks[2], cfg.down, dtype=dtype),
+    }
+    if cfg.gated:
+        p["gate"] = linear_init(ks[0], cfg.gate, dtype=dtype)
+    return p
+
+
+def mlp(cfg: MLPCfg, p: Params, x: jax.Array) -> jax.Array:
+    up = linear(cfg.up, p["up"], x)
+    if cfg.gated:
+        g = activation(cfg.act, linear(cfg.gate, p["gate"], x))
+        h = g * up
+    else:
+        h = activation(cfg.act, up)
+    return linear(cfg.down, p["down"], h)

@@ -1,0 +1,152 @@
+"""AdamW with path-based parameter groups (pure JAX, no optax).
+
+Soft-PQ training needs three groups (paper Table 3):
+  * centroids      — the "centroid learning rate" (1e-3 / 1e-4)
+  * log_t          — the temperature learning rate (1e-1), no weight decay
+  * frozen weights — the dense weights of replaced layers get NO optimizer
+                     state and NO updates (their table-rebuild gradient is
+                     already stop_grad'ed; skipping m/v saves 8 bytes/param,
+                     which matters at 400B scale)
+
+Group membership for lr/wd is regex-over-path; frozen-ness is *structural*:
+a "w"/"b" leaf is frozen iff its parent dict also holds "centroids" (i.e. it
+is the dense weight a LUT site was built from). Frozen leaves carry
+zero-size (0,) placeholder moments so the opt-state pytree structure stays
+static for jit and checkpointing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupRule:
+    """First matching rule wins. `pattern` is a regex over the 'a/b/c' path."""
+
+    pattern: str
+    lr_scale: float = 1.0
+    weight_decay: float | None = None       # None -> optimizer default
+
+
+# paper Table 3: temperature lr = 1e-1 while centroid lr = 1e-3  (100x), wd=0
+# on temperature and norm scales.
+SOFT_PQ_RULES = (
+    GroupRule(pattern=r"log_t$", lr_scale=100.0, weight_decay=0.0),
+    GroupRule(pattern=r"(scale|norm|bias|_b|/b)$", weight_decay=0.0),
+)
+
+
+def lut_frozen_mask(params: Any) -> Any:
+    """True for dense weights that live alongside centroids (LUT_TRAIN)."""
+
+    def walk(node, frozen: bool):
+        if isinstance(node, dict):
+            has_c = "centroids" in node
+            return {
+                k: walk(v, frozen or (has_c and k in ("w", "b")))
+                for k, v in node.items()
+            }
+        if isinstance(node, (list, tuple)):
+            out = [walk(v, frozen) for v in node]
+            return type(node)(out)
+        return frozen
+
+    return walk(params, False)
+
+
+def _path_of(keypath) -> str:
+    parts = []
+    for k in keypath:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    rules: tuple[GroupRule, ...] = ()
+    clip_norm: float | None = 1.0
+    state_dtype: Any = jnp.float32          # bf16 for the giant archs
+
+    def _rule(self, path: str) -> GroupRule:
+        for r in self.rules:
+            if re.search(r.pattern, path):
+                return r
+        return GroupRule(pattern="")
+
+    def init(self, params: Any, frozen: Any | None = None) -> AdamWState:
+        if frozen is None:
+            frozen = jax.tree.map(lambda _: False, params)
+
+        def mk(p, fz):
+            if fz:
+                return jnp.zeros((0,), self.state_dtype)
+            return jnp.zeros(p.shape, self.state_dtype)
+
+        m = jax.tree.map(mk, params, frozen)
+        v = jax.tree.map(mk, params, frozen)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+    def update(
+        self, grads: Any, state: AdamWState, params: Any, frozen: Any | None = None
+    ):
+        if frozen is None:
+            frozen = jax.tree.map(lambda _: False, params)
+        step = state.step + 1
+        lr_t = self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+        if self.clip_norm is not None:
+            sq = jax.tree.map(
+                lambda g, fz: jnp.zeros((), jnp.float32) if fz
+                else jnp.sum(g.astype(jnp.float32) ** 2),
+                grads, frozen,
+            )
+            gnorm = jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+            scale = jnp.ones((), jnp.float32)
+
+        bc1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(kp, p, g, m, v, fz):
+            if fz:
+                return p, m, v
+            rule = self._rule(_path_of(kp))
+            g32 = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g32
+            v_new = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g32 * g32
+            mh = m_new / bc1
+            vh = v_new / bc2
+            wd = self.weight_decay if rule.weight_decay is None else rule.weight_decay
+            delta = mh / (jnp.sqrt(vh) + self.eps) + wd * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * rule.lr_scale * delta
+            return (
+                p_new.astype(p.dtype),
+                m_new.astype(self.state_dtype),
+                v_new.astype(self.state_dtype),
+            )
+
+        flat = jax.tree_util.tree_map_with_path(upd, params, grads, state.m, state.v, frozen)
+        is3 = lambda t: isinstance(t, tuple) and len(t) == 3 and isinstance(t[0], jax.Array)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is3)
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=is3)
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=is3)
+        return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm

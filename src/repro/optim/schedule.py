@@ -1,0 +1,27 @@
+"""LR schedules (paper Table 3: cosine annealing; BERT: constant)."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(
+    base_lr: float, *, total_steps: int, warmup_steps: int = 0, min_lr: float = 0.0
+) -> Callable[[jax.Array], jax.Array]:
+    def fn(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / jnp.maximum(1.0, float(warmup_steps)))
+        prog = jnp.clip(
+            (s - warmup_steps) / max(1.0, float(total_steps - warmup_steps)), 0.0, 1.0
+        )
+        cos = min_lr + 0.5 * (base_lr - min_lr) * (1.0 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+
+    return fn
+
+
+def constant(base_lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(base_lr, jnp.float32)

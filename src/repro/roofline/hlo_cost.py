@@ -1,0 +1,449 @@
+"""Trip-count-aware cost model over optimized (post-SPMD) HLO text.
+
+XLA's built-in `compiled.cost_analysis()` counts each `while` body ONCE —
+for scan-over-layers models that undercounts flops/bytes/collectives by the
+layer count (verified empirically; see EXPERIMENTS.md section Roofline,
+"methodology"). This walker parses the per-device optimized HLO and:
+
+  * multiplies every computation reached through `while(...)` by the loop's
+    `backend_config={"known_trip_count":{"n":...}}`,
+  * charges dot/convolution MACs exactly (2 * prod(out) * prod(contract)),
+  * charges elementwise/reduce ops 1 flop/element,
+  * charges HBM traffic at fusion boundaries (operands + outputs of
+    top-level ops; fusion-internal ops count flops only),
+  * accumulates collective wire bytes (ring model: all-reduce 2x) with the
+    loop multiplier applied.
+
+This is a static roofline model, not a simulator: no overlap, no cache
+reuse between ops. It is the measurement tool the perf loop (section Perf)
+iterates against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\S+))\s+([\w\-]+)\(([^)]*)\)(.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_ZERO_COST = (
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "custom-call",
+    "bitcast-convert",
+)
+
+
+def _dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    return [
+        (dt, [int(x) for x in dims.split(",") if x])
+        for dt, dims in _SHAPE_RE.findall(shape_str)
+    ]
+
+
+def _numel(shape_str: str) -> float:
+    total = 0.0
+    for _, dims in _dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _dims(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost") -> "Cost":
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m, {k: v * m for k, v in self.coll.items()})
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str
+    kind: str
+    operands: list[str]
+    attrs: str
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[_Op]] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._cache: dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: str | None = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc:
+                cur = mc.group(1)
+                self.comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            mo = _OP_RE.match(line)
+            if mo:
+                name, shape, kind, operands, attrs = mo.groups()
+                ops = [o.strip().lstrip("%") for o in operands.split(",") if o.strip().startswith("%")]
+                self.comps[cur].append(_Op(name, shape, kind, ops, attrs))
+
+    # ------------------------------------------------------------------
+    def _op_table(self, comp: str) -> dict[str, _Op]:
+        return {op.name: op for op in self.comps[comp]}
+
+    def _dot_flops(self, op: _Op, table: dict[str, _Op]) -> float:
+        out_n = _numel(op.shape)
+        contract = 1
+        m = _LHS_C_RE.search(op.attrs)
+        if m and op.operands:
+            lhs = table.get(op.operands[0])
+            if lhs is not None:
+                ds = _dims(lhs.shape)
+                if ds:
+                    dims = ds[0][1]
+                    for i in (int(x) for x in m.group(1).split(",") if x):
+                        if i < len(dims):
+                            contract *= dims[i]
+        return 2.0 * out_n * contract
+
+    def _fusion_param_bytes(self, comp: str) -> dict[int, float]:
+        """For each parameter of a fused computation that is ONLY touched by
+        slice-like ops, the bytes actually read (region size), not the full
+        operand — a scan slicing one layer from a stacked tree must not be
+        charged the whole stack."""
+        ops = self.comps[comp]
+        param_idx: dict[str, int] = {}
+        # parameter order of appearance == operand index order in HLO text
+        order = [op.name for op in ops if op.kind == "parameter"]
+        for i, nm in enumerate(order):
+            param_idx[nm] = i
+        consumers: dict[str, list[_Op]] = {}
+        for op in ops:
+            for o in op.operands:
+                consumers.setdefault(o, []).append(op)
+        out: dict[int, float] = {}
+        slice_kinds = ("dynamic-slice", "gather", "dynamic-update-slice")
+        for nm, i in param_idx.items():
+            cons = consumers.get(nm, [])
+            if cons and all(k.kind in slice_kinds for k in cons):
+                total = 0.0
+                for k in cons:
+                    if k.kind == "dynamic-update-slice" and k.operands and k.operands[0] == nm:
+                        continue  # aliased in-place destination
+                    total += _bytes(k.shape)
+                out[i] = total
+        return out
+
+    def _fusion_alias(self, comp: str) -> tuple[float | None, dict[int, float]]:
+        """Detect in-place loop-buffer updates inside a fusion: a dus/scatter
+        whose destination traces (through convert/bitcast/copy) to a fusion
+        parameter. The buffer aliases in place on TPU, so both the fusion
+        output and that parameter cost only the update-region bytes."""
+        ops = self.comps[comp]
+        table = self._op_table(comp)
+        order = [op.name for op in ops if op.kind == "parameter"]
+        pidx = {nm: i for i, nm in enumerate(order)}
+
+        def trace(name: str) -> str | None:
+            seen = 0
+            while name in table and seen < 10:
+                o = table[name]
+                if o.kind == "parameter":
+                    return o.name
+                if o.kind in ("convert", "bitcast", "copy", "reshape") and o.operands:
+                    name = o.operands[0]
+                    seen += 1
+                    continue
+                return None
+            return None
+
+        out_override = None
+        alias_params: dict[int, float] = {}
+        for op in ops:
+            if op.kind not in ("dynamic-update-slice", "scatter", "scatter-add"):
+                continue
+            un = (
+                op.operands[1]
+                if op.kind == "dynamic-update-slice" and len(op.operands) > 1
+                else (op.operands[-1] if op.operands else None)
+            )
+            u = table.get(un) if un else None
+            upd_b = _bytes(u.shape) if u is not None else _bytes(op.shape) * 0.05
+            dest = trace(op.operands[0]) if op.operands else None
+            if dest is not None and dest in pidx:
+                alias_params[pidx[dest]] = 2.0 * upd_b
+                out_override = (out_override or 0.0) + 2.0 * upd_b
+        return out_override, alias_params
+
+    def comp_cost(self, comp: str, *, count_bytes: bool = True) -> Cost:
+        key = f"{comp}|{count_bytes}"
+        if key in self._cache:
+            return self._cache[key]
+        total = Cost()
+        table = self._op_table(comp)
+        for op in self.comps[comp]:
+            total += self._op_cost(op, table, count_bytes=count_bytes)
+        self._cache[key] = total
+        return total
+
+    def _op_cost(self, op: _Op, table: dict[str, _Op], *, count_bytes: bool) -> Cost:
+        kind = op.kind
+        c = Cost()
+        if kind in _ZERO_COST:
+            return c
+
+        def boundary_bytes() -> float:
+            b = _bytes(op.shape)
+            for o in op.operands:
+                src = table.get(o)
+                if src is not None and src.kind not in ("constant",):
+                    b += _bytes(src.shape)
+            return b
+
+        if kind == "while":
+            mb = _BODY_RE.search(op.attrs)
+            mc = _COND_RE.search(op.attrs)
+            mt = _TRIP_RE.search(op.attrs)
+            trips = float(mt.group(1)) if mt else 1.0
+            inner = Cost()
+            if mb and mb.group(1) in self.comps:
+                inner += self.comp_cost(mb.group(1), count_bytes=count_bytes)
+            if mc and mc.group(1) in self.comps:
+                inner += self.comp_cost(mc.group(1), count_bytes=count_bytes)
+            return inner.scaled(trips)
+
+        if kind == "conditional":
+            mb = _BRANCHES_RE.search(op.attrs)
+            if mb:
+                branch_costs = []
+                for name in mb.group(1).split(","):
+                    name = name.strip().lstrip("%")
+                    if name in self.comps:
+                        branch_costs.append(self.comp_cost(name, count_bytes=count_bytes))
+                if branch_costs:
+                    worst = max(branch_costs, key=lambda x: x.flops + x.bytes)
+                    c += worst
+            return c
+
+        if kind == "fusion":
+            mcalls = _CALLS_RE.search(op.attrs)
+            called = mcalls.group(1) if mcalls and mcalls.group(1) in self.comps else None
+            if called:
+                inner = self.comp_cost(called, count_bytes=False)
+                c.flops += inner.flops
+                for k, v in inner.coll.items():
+                    c.coll[k] = c.coll.get(k, 0.0) + v
+            if count_bytes:
+                out_b = _bytes(op.shape)
+                touched: dict[int, float] = {}
+                if called:
+                    out_override, alias_params = self._fusion_alias(called)
+                    if out_override is not None:
+                        out_b = min(out_b, out_override)
+                    touched.update(self._fusion_param_bytes(called))
+                    touched.update(alias_params)
+                c.bytes += out_b
+                for i, o in enumerate(op.operands):
+                    src = table.get(o)
+                    if src is None or src.kind == "constant":
+                        continue
+                    full = _bytes(src.shape)
+                    c.bytes += min(full, touched[i]) if i in touched else full
+            return c
+
+        if kind == "call":
+            mcalls = _CALLS_RE.search(op.attrs) or _BODY_RE.search(op.attrs)
+            target = None
+            m2 = re.search(r"to_apply=%?([\w.\-]+)", op.attrs)
+            if m2:
+                target = m2.group(1)
+            elif mcalls:
+                target = mcalls.group(1)
+            if target and target in self.comps:
+                c += self.comp_cost(target, count_bytes=count_bytes)
+            return c
+
+        if any(kind.startswith(col) for col in COLLECTIVES):
+            if kind.endswith("-done"):
+                return c
+            base = kind.replace("-start", "")
+            wire = _bytes(op.shape)
+            if base == "all-reduce":
+                wire *= 2.0
+            c.coll[base] = c.coll.get(base, 0.0) + wire
+            if count_bytes:
+                c.bytes += boundary_bytes()
+            return c
+
+        if kind in ("dot", "dot-general"):
+            c.flops += self._dot_flops(op, table)
+            if count_bytes:
+                c.bytes += boundary_bytes()
+            return c
+
+        if kind == "convolution":
+            # rough: 2 * out_elems * (in_channels * kernel_elems) — parse window
+            c.flops += 2.0 * _numel(op.shape) * 1.0
+            if count_bytes:
+                c.bytes += boundary_bytes()
+            return c
+
+        if kind in ("dynamic-slice", "gather"):
+            # touches only the sliced/gathered region, not the whole operand
+            c.flops += _numel(op.shape)
+            if count_bytes:
+                c.bytes += 2.0 * _bytes(op.shape)
+            return c
+
+        if kind in ("dynamic-update-slice", "scatter", "scatter-add"):
+            # reads the update + indices, writes the updated region;
+            # the big operand aliases in place (donation).
+            # dus operands: (operand, update, idx...); scatter: (operand,
+            # indices, updates)
+            upd_name = None
+            if kind == "dynamic-update-slice" and len(op.operands) >= 2:
+                upd_name = op.operands[1]
+            elif op.operands:
+                upd_name = op.operands[-1]
+            upd = table.get(upd_name) if upd_name else None
+            upd_b = _bytes(upd.shape) if upd is not None else _bytes(op.shape)
+            c.flops += _numel(upd.shape) if upd is not None else _numel(op.shape)
+            if count_bytes:
+                c.bytes += 2.0 * upd_b
+            return c
+
+        if kind == "convert":
+            # dtype converts fuse into their consumers on TPU (and exist on
+            # the CPU backend only because CPU dots can't consume bf16)
+            c.flops += _numel(op.shape)
+            return c
+
+        if kind == "reduce" or kind.startswith("reduce-window"):
+            inp = table.get(op.operands[0]) if op.operands else None
+            c.flops += _numel(inp.shape) if inp is not None else _numel(op.shape)
+            if count_bytes:
+                c.bytes += boundary_bytes()
+            return c
+
+        # elementwise / data movement default
+        c.flops += _numel(op.shape)
+        if count_bytes and kind not in ("broadcast", "reshape", "transpose", "copy-start", "copy-done"):
+            c.bytes += boundary_bytes()
+        if count_bytes and kind == "copy":
+            c.bytes += 2 * _bytes(op.shape)
+        return c
+
+    # ------------------------------------------------------------------
+    def total(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo_text(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()
+
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def hotspots(hlo_text: str, *, top: int = 25, depth: int = 4) -> list[tuple[str, Cost]]:
+    """Aggregate cost by (truncated) jax op_name metadata — the 'profile'
+    the section-Perf hypothesis loop reads. Loop multipliers applied."""
+    model = HloCostModel(hlo_text)
+    sums: dict[str, Cost] = {}
+
+    def visit(comp: str, mult: float):
+        table = model._op_table(comp)
+        for op in model.comps[comp]:
+            if op.kind == "while":
+                mb = _BODY_RE.search(op.attrs)
+                mc = _COND_RE.search(op.attrs)
+                mt = _TRIP_RE.search(op.attrs)
+                trips = float(mt.group(1)) if mt else 1.0
+                for m in (mb, mc):
+                    if m and m.group(1) in model.comps:
+                        visit(m.group(1), mult * trips)
+                continue
+            if op.kind == "call":
+                m2 = re.search(r"to_apply=%?([\w.\-]+)", op.attrs)
+                if m2 and m2.group(1) in model.comps:
+                    visit(m2.group(1), mult)
+                continue
+            c = model._op_cost(op, table, count_bytes=True)
+            mm = _META_RE.search(op.attrs)
+            if mm is None and op.kind == "fusion":
+                # attribute the fusion to its root op's metadata
+                mcalls = _CALLS_RE.search(op.attrs)
+                if mcalls and mcalls.group(1) in model.comps:
+                    for inner in model.comps[mcalls.group(1)]:
+                        m2 = _META_RE.search(inner.attrs)
+                        if m2:
+                            mm = m2
+            name = mm.group(1) if mm else f"<{op.kind}>"
+            key = "/".join(name.split("/")[:depth])
+            agg = sums.setdefault(key, Cost())
+            agg.flops += c.flops * mult
+            agg.bytes += c.bytes * mult
+            for k, v in c.coll.items():
+                agg.coll[k] = agg.coll.get(k, 0.0) + v * mult
+
+    assert model.entry
+    visit(model.entry, 1.0)
+    ranked = sorted(sums.items(), key=lambda kv: -(kv[1].bytes + kv[1].coll_bytes * 16))
+    return ranked[:top]

@@ -1,0 +1,169 @@
+"""Slot-based continuous-batching serving engine.
+
+vLLM-style control plane scaled to this repo: a fixed pool of B slots backed
+by batched KV caches; requests are admitted into free slots, prefilled with
+a row-masked forward (other slots' caches untouched via a select-merge),
+then all active slots decode together one token per engine step. Finished
+slots (EOS or max_tokens) are freed and refilled from the queue.
+
+The jitted prefill/decode steps are the same `forward_step` the multi-pod
+dry-run lowers — the engine is pure host-side orchestration, so it works
+identically on 1 CPU device and a 512-chip mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelBundle
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_tokens: int = 16
+    eos_id: int | None = None
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        bundle: ModelBundle,
+        params: Any,
+        *,
+        n_slots: int = 4,
+        max_seq: int = 256,
+        prefill_chunk: int = 32,
+        compute_dtype=jnp.float32,
+    ):
+        self.bundle = bundle
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
+        self.caches = bundle.init_caches(n_slots, max_seq, dtype=compute_dtype)
+        self.cache_len = np.zeros((n_slots,), np.int32)
+        self.slots: list[Request | None] = [None] * n_slots
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._next_rid = 0
+        self._compute_dtype = compute_dtype
+
+        def prefill(params, tokens, cache_len, caches, slot_mask):
+            logits, new_caches = bundle.forward_step(
+                params,
+                {"tokens": tokens, "cache_len": cache_len},
+                caches,
+                compute_dtype=compute_dtype,
+            )
+            # merge: only the prefilled slot's cache rows advance
+            def merge(old, new):
+                # every cache leaf is layer-stacked: (L, B, ...) -> batch dim 1
+                shape = [1] * old.ndim
+                shape[1] = n_slots
+                m = slot_mask.reshape(shape)
+                return jnp.where(m, new, old)
+
+            merged = jax.tree.map(merge, caches, new_caches)
+            return logits, merged
+
+        self._prefill = jax.jit(prefill)
+
+        def decode(params, tokens, cache_len, caches, active):
+            logits, new_caches = bundle.forward_step(
+                params,
+                {"tokens": tokens, "cache_len": cache_len},
+                caches,
+                compute_dtype=compute_dtype,
+            )
+            def merge(old, new):
+                shape = [1] * old.ndim
+                shape[1] = n_slots
+                m = active.reshape(shape)
+                return jnp.where(m, new, old)
+
+            return logits, jax.tree.map(merge, caches, new_caches)
+
+        self._decode = jax.jit(decode)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: list[int], *, max_tokens: int = 16, eos_id: int | None = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_tokens, eos_id))
+        return rid
+
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self._do_prefill(i, req)
+
+    def _do_prefill(self, slot: int, req: Request) -> None:
+        prompt = req.prompt or [0]
+        chunk = len(prompt) + ((-len(prompt)) % self.prefill_chunk)
+        toks = np.zeros((self.n_slots, chunk), np.int32)
+        toks[slot, : len(prompt)] = prompt
+        cache_len = np.zeros((self.n_slots,), np.int32)
+        cache_len[slot] = 0
+        mask = np.zeros((self.n_slots,), bool)
+        mask[slot] = True
+        logits, self.caches = self._prefill(
+            self.params,
+            jnp.asarray(toks),
+            jnp.asarray(cache_len),
+            self.caches,
+            jnp.asarray(mask),
+        )
+        self.cache_len[slot] = len(prompt)
+        nxt = int(jnp.argmax(logits[slot, len(prompt) - 1]))
+        req.out_tokens.append(nxt)
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine step: admit waiting requests, decode all active slots."""
+        self._admit()
+        active = np.array([r is not None for r in self.slots])
+        if not active.any():
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                toks[i, 0] = r.out_tokens[-1] if r.out_tokens else (r.prompt[-1] if r.prompt else 0)
+        logits, self.caches = self._decode(
+            self.params,
+            jnp.asarray(toks),
+            jnp.asarray(self.cache_len),
+            self.caches,
+            jnp.asarray(active),
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            self.cache_len[i] += 1
+            tok = int(nxt[i])
+            r.out_tokens.append(tok)
+            hit_eos = r.eos_id is not None and tok == r.eos_id
+            if hit_eos or len(r.out_tokens) >= r.max_tokens or self.cache_len[i] >= self.max_seq - 1:
+                r.done = True
+                self.finished.append(r)
+                self.slots[i] = None
+                self.cache_len[i] = 0
+
+    def run_until_done(self, max_steps: int = 1000) -> list[Request]:
+        for _ in range(max_steps):
+            if not self.queue and all(s is None for s in self.slots):
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,92 @@
+"""pjit-able train/serve step factories.
+
+`make_train_step` builds the canonical production step:
+  loss (bf16 compute, fp32 reductions) -> grads -> global-norm clip ->
+  AdamW with param groups -> new params/opt-state + metrics.
+
+Gradient accumulation (giant archs) scans over microbatches so the saved
+activations of only one microbatch are live at a time; grads accumulate in
+fp32. Under pjit, the gradient all-reduce across the data axes is emitted
+by GSPMD from the sharding of params (replicated or FSDP) vs batch (data-
+sharded) — no explicit collectives here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelBundle
+from repro.optim import AdamW, AdamWState
+
+
+def make_loss_fn(bundle: ModelBundle, *, compute_dtype=jnp.bfloat16):
+    def loss_fn(params, batch):
+        return bundle.loss(params, batch, compute_dtype=compute_dtype)
+
+    return loss_fn
+
+
+def make_train_step(
+    bundle: ModelBundle,
+    opt: AdamW,
+    *,
+    frozen_mask: Any | None = None,
+    compute_dtype=jnp.bfloat16,
+    grad_accum: int = 1,
+) -> Callable:
+    loss_fn = make_loss_fn(bundle, compute_dtype=compute_dtype)
+
+    def split_micro(batch):
+        def r(a):
+            if a.ndim == 0:
+                return a
+            b = a.shape[0]
+            if a.shape[0] % grad_accum:
+                raise ValueError(f"batch {b} not divisible by grad_accum {grad_accum}")
+            return a.reshape(grad_accum, b // grad_accum, *a.shape[1:])
+
+        # pos (3, B, S) splits on axis 1
+        out = {}
+        for k, v in batch.items():
+            if k == "pos" and v.ndim == 3:
+                g = v.shape[1] // grad_accum
+                out[k] = v.reshape(3, grad_accum, g, v.shape[2]).swapaxes(0, 1)
+            else:
+                out[k] = r(v)
+        return out
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = split_micro(batch)
+
+            def acc_fn(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params, frozen_mask)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(bundle: ModelBundle, *, compute_dtype=jnp.bfloat16) -> Callable:
+    def serve_step(params, batch, caches):
+        return bundle.forward_step(params, batch, caches, compute_dtype=compute_dtype)
+
+    return serve_step

@@ -1,0 +1,110 @@
+"""Production training loop: checkpoint/restart, straggler + failure policy.
+
+The loop is deliberately plain Python around one jitted step so every
+control-plane feature is visible and testable:
+
+  * periodic async checkpoints (params + opt state + step), atomic commit
+  * crash/preemption recovery: `resume()` restores the newest committed
+    checkpoint and replays the data stream from the step counter
+    (deterministic batch_at(step) data makes the restart exact)
+  * StepGuard retries transient failures, then falls back to a restore
+  * StragglerMonitor flags slow steps (scheduler hook on a real pod)
+  * failure injection hook for tests (fail_at / fail_exc)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.distributed.fault_tolerance import HeartbeatFile, StepGuard, StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 3
+    log_every: int = 10
+    max_retries: int = 2
+    heartbeat: str | None = None
+
+
+@dataclasses.dataclass
+class Trainer:
+    step_fn: Callable            # (params, opt_state, batch) -> (params, opt, metrics)
+    batch_at: Callable[[int], Any]
+    cfg: TrainerConfig
+    fail_at: int | None = None               # test hook: raise at this step once
+    fail_exc: Exception | None = None
+
+    def __post_init__(self):
+        self.ckpt = Checkpointer(self.cfg.ckpt_dir, keep_last=self.cfg.keep_last)
+        self.monitor = StragglerMonitor()
+        self.guard = StepGuard(max_retries=self.cfg.max_retries)
+        self.hb = HeartbeatFile(self.cfg.heartbeat) if self.cfg.heartbeat else None
+        self.history: list[dict] = []
+        self._failed_once = False
+
+    # ------------------------------------------------------------------
+    def resume(self, params: Any, opt_state: Any) -> tuple[int, Any, Any]:
+        """Restore the newest committed checkpoint if one exists."""
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return 0, params, opt_state
+        _, tree = self.ckpt.restore({"params": params, "opt": opt_state})
+        return latest, tree["params"], tree["opt"]
+
+    # ------------------------------------------------------------------
+    def fit(self, params: Any, opt_state: Any, *, start_step: int | None = None):
+        step, params, opt_state = (
+            (start_step, params, opt_state)
+            if start_step is not None
+            else self.resume(params, opt_state)
+        )
+        while step < self.cfg.total_steps:
+            batch = self.batch_at(step)
+            t0 = time.time()
+
+            def run(step=step, batch=batch, params=params, opt_state=opt_state):
+                if self.fail_at == step and not self._failed_once:
+                    self._failed_once = True
+                    raise (self.fail_exc or RuntimeError("injected failure"))
+                return self.step_fn(params, opt_state, batch)
+
+            try:
+                params, opt_state, metrics = self.guard.run(run)
+            except RuntimeError:
+                # exhausted retries -> restore-and-continue (fault tolerance)
+                step, params, opt_state = self.resume(params, opt_state)
+                continue
+
+            dt = time.time() - t0
+            slow = self.monitor.record(step, dt)
+            rec = {
+                "step": step,
+                "loss": float(metrics["loss"]),
+                "grad_norm": float(metrics["grad_norm"]),
+                "seconds": dt,
+                "straggler": slow,
+            }
+            self.history.append(rec)
+            if self.hb:
+                self.hb.beat(step, loss=rec["loss"])
+            if self.cfg.log_every and step % self.cfg.log_every == 0:
+                print(
+                    f"step {step:6d} loss {rec['loss']:.4f} "
+                    f"gnorm {rec['grad_norm']:.3f} {dt*1e3:.0f}ms"
+                    + (" [straggler]" if slow else "")
+                )
+            step += 1
+            if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+        self.ckpt.wait()
+        return params, opt_state

@@ -1,0 +1,11 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests must see the real
+single CPU device; multi-device tests spawn subprocesses with their own
+--xla_force_host_platform_device_count (tests/_subproc.py)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

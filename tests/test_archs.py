@@ -1,0 +1,96 @@
+"""Per-arch reduced-config smoke tests (deliverable f): one forward/train
+step on CPU asserting output shapes + no NaNs, plus a serve prefill+decode
+in the deployed LUT mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, build_model, get_arch, input_specs, reduce_arch
+from repro.core.amm import Mode
+
+
+def _batch(arch, key, B=2, S=16):
+    b = {"labels": jax.random.randint(key, (B, S), 0, arch.vocab)}
+    if arch.family == "vlm":
+        b["embeds"] = jax.random.normal(key, (B, S, arch.d_model))
+        b["pos"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S)
+        )
+    elif arch.family == "audio":
+        b["frames"] = jax.random.normal(key, (B, arch.enc_frames, arch.d_model))
+        b["tokens"] = jax.random.randint(key, (B, S), 0, arch.vocab)
+    else:
+        b["tokens"] = jax.random.randint(key, (B, S), 0, arch.vocab)
+    return b
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step_smoke(arch_id, key):
+    arch = reduce_arch(get_arch(arch_id))
+    for mode in (Mode.DENSE, Mode.LUT_TRAIN):
+        m = build_model(arch, mode)
+        params = m.init(key)
+        batch = _batch(arch, key)
+        loss, grads = jax.value_and_grad(
+            lambda p: m.loss(p, batch, compute_dtype=jnp.float32)
+        )(params)
+        assert np.isfinite(float(loss)), (arch_id, mode)
+        gsum = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+        assert np.isfinite(gsum) and gsum > 0, (arch_id, mode)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_serve_smoke(arch_id, key):
+    arch = reduce_arch(get_arch(arch_id))
+    m = build_model(arch, Mode.LUT_INFER)
+    params = m.init(key)
+    B, S_max, S_pre = 2, 24, 8
+    caches = m.init_caches(B, S_max, dtype=jnp.float32)
+    batch = {"cache_len": jnp.zeros((B,), jnp.int32)}
+    if arch.family == "vlm":
+        batch["embeds"] = jax.random.normal(key, (B, S_pre, arch.d_model))
+    elif arch.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, arch.enc_frames, arch.d_model))
+        batch["tokens"] = jax.random.randint(key, (B, S_pre), 0, arch.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S_pre), 0, arch.vocab)
+    logits, caches = m.forward_step(params, batch, caches, compute_dtype=jnp.float32)
+    assert logits.shape == (B, S_pre, arch.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    step = {"cache_len": jnp.full((B,), S_pre, jnp.int32)}
+    if arch.family == "vlm":
+        step["embeds"] = jax.random.normal(key, (B, 1, arch.d_model))
+    else:
+        step["tokens"] = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
+    logits2, _ = m.forward_step(params, step, caches, compute_dtype=jnp.float32)
+    assert logits2.shape == (B, 1, arch.vocab)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_input_specs_cover_all_shapes(arch_id):
+    arch = get_arch(arch_id)
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        specs = input_specs(arch, shape)
+        assert all(hasattr(v, "shape") for v in specs.values())
+        if shape == "train_4k":
+            assert "labels" in specs
+
+
+def test_paper_replacement_policy():
+    """First layer stays dense (paper section 6.1); BERT: last-6 only."""
+    arch = get_arch("llama3_8b")
+    m = build_model(arch, Mode.LUT_TRAIN)
+    segs = m.cfg.segments
+    assert segs[0][0] == 1 and segs[0][1].attn.q.mode == Mode.DENSE
+    assert segs[1][0] == arch.n_layers - 1
+    assert segs[1][1].attn.q.mode == Mode.LUT_TRAIN
+
+    bert = get_arch("bert_base")
+    mb = build_model(bert, Mode.LUT_TRAIN)
+    assert mb.cfg.segments[0][0] == 6 and mb.cfg.segments[1][0] == 6
+    assert mb.cfg.segments[0][1].attn.q.mode == Mode.DENSE
+    assert mb.cfg.segments[1][1].attn.q.mode == Mode.LUT_TRAIN

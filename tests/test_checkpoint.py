@@ -1,0 +1,65 @@
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": {"w": jax.random.normal(k1, (4, 8)) * scale},
+        "b": [jnp.arange(3.0), {"c": jax.random.normal(k2, (2,)) * scale}],
+    }
+
+
+def test_roundtrip(tmp_path, key):
+    ck = Checkpointer(tmp_path)
+    t = _tree(key)
+    ck.save(7, t, blocking=True)
+    step, r = ck.restore(t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_keep_last(tmp_path, key):
+    ck = Checkpointer(tmp_path, keep_last=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(key, s), blocking=True)
+    assert ck.latest_step() == 4
+    assert ck.all_steps() == [3, 4]
+    _, r = ck.restore(_tree(key))
+    np.testing.assert_allclose(np.asarray(r["a"]["w"]), np.asarray(_tree(key, 4)["a"]["w"]))
+
+
+def test_async_save_nonblocking(tmp_path, key):
+    ck = Checkpointer(tmp_path)
+    t = _tree(key)
+    ck.save(1, t, blocking=False)        # returns immediately
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_atomic_no_partial(tmp_path, key):
+    """A .tmp dir left behind by a crash must never be picked up."""
+    ck = Checkpointer(tmp_path)
+    ck.save(5, _tree(key), blocking=True)
+    bad = tmp_path / "step_00000009.tmp"
+    bad.mkdir()
+    (bad / "arrays.npz").write_bytes(b"junk")
+    assert ck.latest_step() == 5
+
+
+def test_restore_with_shardings(tmp_path, key):
+    ck = Checkpointer(tmp_path)
+    t = _tree(key)
+    ck.save(1, t, blocking=True)
+    shardings = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t
+    )
+    _, r = ck.restore(t, shardings=shardings)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,88 @@
+"""Dense -> LUT conversion: graft fidelity, k-means init quality, deploy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core import convert
+from repro.core.amm import Mode
+from repro.data import MarkovLM
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch = reduce_arch(get_arch("llama3_8b"), n_layers=3, vocab=64, d_model=64, d_ff=128)
+    data = MarkovLM(vocab=arch.vocab, seq_len=16, batch=8)
+    dense = build_model(arch, Mode.DENSE)
+    dparams = dense.init(jax.random.PRNGKey(0))
+    # brief pretrain: conversion assumes a TRAINED source model (its
+    # activations carry the cluster structure k-means exploits)
+    from repro.optim import AdamW
+    from repro.train.train_step import make_train_step
+
+    opt = AdamW(lr=3e-3)
+    step = jax.jit(make_train_step(dense, opt, compute_dtype=jnp.float32))
+    ostate = opt.init(dparams)
+    for i in range(30):
+        dparams, ostate, _ = step(dparams, ostate, data.batch_at(i))
+    samples = [data.batch_at(i) for i in range(2)]
+    blut, lparams = convert.convert_dense_to_lut_train(
+        dense, dparams, samples, jax.random.PRNGKey(1)
+    )
+    return arch, data, dense, dparams, blut, lparams
+
+
+def test_graft_copies_weights(setup):
+    arch, data, dense, dparams, blut, lparams = setup
+    # embedding copied verbatim
+    np.testing.assert_array_equal(
+        np.asarray(dparams["embed"]["table"]), np.asarray(lparams["embed"]["table"])
+    )
+    # layer-0 (dense segment) weights = dense model layer 0
+    d0 = jax.tree.leaves(jax.tree.map(lambda a: a[0], dparams["segments"][0]))
+    l0 = jax.tree.leaves(jax.tree.map(lambda a: a[0], lparams["segments"][0]))
+    # lut segment 0 has no centroids (dense mode) -> same leaf count
+    assert len(d0) == len(l0)
+    # replaced-layer weights preserved as the frozen table source
+    wq_dense = dparams["segments"][0]["attn"]["q"]["w"][1:]    # layers 1..L-1
+    wq_lut = lparams["segments"][1]["attn"]["q"]["w"]
+    np.testing.assert_array_equal(np.asarray(wq_dense), np.asarray(wq_lut))
+
+
+def test_kmeans_init_beats_random(setup):
+    arch, data, dense, dparams, blut, lparams = setup
+    batch = data.batch_at(99)
+    loss_km = float(blut.loss(lparams, batch, compute_dtype=jnp.float32))
+
+    rnd = blut.init(jax.random.PRNGKey(2))
+    rnd = convert.graft_dense_to_lut(dparams, rnd)           # weights same, centroids random
+    loss_rnd = float(blut.loss(rnd, batch, compute_dtype=jnp.float32))
+    assert loss_km < loss_rnd
+
+
+def test_deploy_matches_train_forward(setup):
+    """Deployed int8 path must equal the QAT forward (which already fake-
+    quantizes) up to int8 rounding noise."""
+    arch, data, dense, dparams, blut, lparams = setup
+    batch = data.batch_at(7)
+    l_train = float(blut.loss(lparams, batch, compute_dtype=jnp.float32))
+    binf, iparams = convert.deploy_lut_train_params(blut, lparams)
+    l_inf = float(binf.loss(iparams, batch, compute_dtype=jnp.float32))
+    assert abs(l_train - l_inf) < 0.02 * max(1.0, abs(l_train))
+
+
+def test_tape_capture_covers_lut_sites(setup):
+    arch, data, dense, dparams, blut, lparams = setup
+    import dataclasses
+    from repro.models import transformer as tf
+    from repro.models.common import tape_capture
+
+    cfg = dataclasses.replace(dense.cfg, unroll=True, remat=False)
+    batch = data.batch_at(0)
+    pos = jnp.arange(16, dtype=jnp.int32)[None, :].repeat(8, 0)
+    with tape_capture() as tape:
+        tf.lm_apply(cfg, dparams, tokens=batch["tokens"], pos=pos, compute_dtype=jnp.float32)
+    # 3 layers x 7 sites (q,k,v,o,gate,up,down)
+    assert len(tape.records) == 3 * 7

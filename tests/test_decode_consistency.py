@@ -1,0 +1,103 @@
+"""Prefill+decode must reproduce the full-sequence forward exactly — the
+strongest end-to-end correctness check for KV caches, SSD state passing,
+RoPE positions, and the shared-block hybrid cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+import repro.models.transformer as tf
+import repro.models.hybrid as hy
+import repro.models.encdec as ed
+
+ARCHS = ["llama3_8b", "qwen3_1p7b", "mamba2_370m", "zamba2_1p2b", "qwen2_vl_7b", "whisper_tiny"]
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_decode_matches_full(arch_id, key):
+    arch = reduce_arch(get_arch(arch_id))
+    m = build_model(arch, Mode.DENSE)
+    params = m.init(key)
+    B, S, S_pre = 2, 12, 7
+    tol = dict(rtol=5e-3, atol=5e-3)
+
+    if arch.family == "vlm":
+        embeds = jax.random.normal(key, (B, S, arch.d_model))
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, None], (3, B, S))
+        full, _, _ = tf.lm_apply(m.cfg, params, embeds=embeds, pos=pos, compute_dtype=jnp.float32)
+        caches = m.init_caches(B, S, dtype=jnp.float32)
+        lg, caches = m.forward_step(
+            params, {"embeds": embeds[:, :S_pre], "cache_len": jnp.zeros((B,), jnp.int32)},
+            caches, compute_dtype=jnp.float32,
+        )
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, :S_pre]), **tol)
+        for i in range(S_pre, S):
+            lg, caches = m.forward_step(
+                params, {"embeds": embeds[:, i : i + 1], "cache_len": jnp.full((B,), i, jnp.int32)},
+                caches, compute_dtype=jnp.float32,
+            )
+            np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]), **tol)
+        return
+
+    toks = jax.random.randint(key, (B, S), 0, arch.vocab)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    if arch.family == "audio":
+        frames = jax.random.normal(key, (B, arch.enc_frames, arch.d_model))
+        enc_out = ed.encode(m.cfg, params, frames, compute_dtype=jnp.float32)
+        full, _ = ed.decode(
+            m.cfg, params, tokens=toks, pos=pos, enc_out=enc_out, compute_dtype=jnp.float32
+        )
+    elif arch.family == "hybrid":
+        full, _, _ = hy.hybrid_apply(m.cfg, params, tokens=toks, pos=pos, compute_dtype=jnp.float32)
+    else:
+        full, _, _ = tf.lm_apply(m.cfg, params, tokens=toks, pos=pos, compute_dtype=jnp.float32)
+
+    caches = m.init_caches(B, S, dtype=jnp.float32)
+    batch = {"tokens": toks[:, :S_pre], "cache_len": jnp.zeros((B,), jnp.int32)}
+    if arch.family == "audio":
+        batch["frames"] = frames
+    lg, caches = m.forward_step(params, batch, caches, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, :S_pre]), **tol)
+    for i in range(S_pre, S):
+        lg, caches = m.forward_step(
+            params, {"tokens": toks[:, i : i + 1], "cache_len": jnp.full((B,), i, jnp.int32)},
+            caches, compute_dtype=jnp.float32,
+        )
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]), **tol)
+
+
+def test_ragged_cache_lens(key):
+    """Per-slot cursors: decoding with different cache_len per row must match
+    per-row single decode (continuous batching correctness)."""
+    arch = reduce_arch(get_arch("llama3_8b"), n_layers=2)
+    m = build_model(arch, Mode.DENSE)
+    params = m.init(key)
+    S_max = 16
+    toks = jax.random.randint(key, (2, 10), 0, arch.vocab)
+
+    # row 0 prefilled 5 tokens, row 1 prefilled 9
+    caches = m.init_caches(2, S_max, dtype=jnp.float32)
+    lens = jnp.asarray([5, 9], jnp.int32)
+    # prefill rows individually into a batched cache via masking path of engine
+    # here: prefill both with same S then step row-wise using cache_len
+    lg0, caches = m.forward_step(
+        params, {"tokens": toks[:, :5], "cache_len": jnp.zeros((2,), jnp.int32)},
+        caches, compute_dtype=jnp.float32,
+    )
+    lg1, caches = m.forward_step(
+        params, {"tokens": toks[:, 5:9], "cache_len": jnp.full((2,), 5, jnp.int32)},
+        caches, compute_dtype=jnp.float32,
+    )
+    # decode one token with ragged lens: row0 continues from 5, row1 from 9
+    step_tok = jnp.stack([toks[0, 5], toks[1, 9]])[:, None]
+    lg, _ = m.forward_step(
+        params, {"tokens": step_tok, "cache_len": lens}, caches, compute_dtype=jnp.float32
+    )
+    # reference: full forwards truncated per row
+    pos = jnp.arange(10, dtype=jnp.int32)[None, :].repeat(2, 0)
+    full, _, _ = tf.lm_apply(m.cfg, params, tokens=toks, pos=pos, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg[0, 0]), np.asarray(full[0, 5]), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(lg[1, 0]), np.asarray(full[1, 9]), rtol=5e-3, atol=5e-3)

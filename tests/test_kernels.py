@@ -1,0 +1,74 @@
+"""Pallas kernels vs the pure-jnp oracle: shape/dtype sweep, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels.dist_argmin import encode_pallas
+from repro.kernels.lut_amm import lut_amm_pallas
+from repro.kernels.ref import encode_ref, lut_amm_ref
+
+SHAPES = [
+    # (N, D, M, K, V, block_n, block_m, block_c)
+    (32, 32, 64, 16, 4, 16, 64, 4),
+    (64, 64, 128, 16, 8, 32, 128, 8),
+    (100, 64, 130, 16, 32, 32, 128, None),      # padding on N and M
+    (17, 96, 48, 8, 32, 8, 128, 1),             # tiny blocks, K=8
+    (128, 256, 512, 16, 32, 128, 256, None),    # production-ish tile
+    (8, 128, 384, 16, 16, 8, 128, 2),
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=[str(s[:5]) for s in SHAPES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lut_amm_matches_ref(shape, dtype):
+    n, d, m, k, v, bn, bm, bc = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n * d), 3)
+    x = jax.random.normal(k1, (n, d), dtype)
+    P = jax.random.normal(k2, (d // v, k, v), jnp.float32)
+    T = jax.random.normal(k3, (d // v, k, m), jnp.float32)
+    qt = quant.quantize_table(T, bits=8)
+    ref = lut_amm_ref(x, P, qt.q, qt.scale)
+    out = lut_amm_pallas(
+        x, P, qt.q, qt.scale, block_n=bn, block_m=bm, block_c=bc, interpret=True
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES[:4], ids=[str(s[:5]) for s in SHAPES[:4]])
+def test_per_column_scale_variant(shape):
+    n, d, m, k, v, bn, bm, bc = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1 + n), 3)
+    x = jax.random.normal(k1, (n, d))
+    P = jax.random.normal(k2, (d // v, k, v))
+    T = jax.random.normal(k3, (d // v, k, m))
+    qt = quant.quantize_table(T, bits=8, per_column=True)
+    ref = lut_amm_ref(x, P, qt.q, qt.scale)
+    out = lut_amm_pallas(
+        x, P, qt.q, qt.scale, block_n=bn, block_m=bm, block_c=bc, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "n,d,k,v", [(32, 32, 16, 4), (100, 256, 16, 32), (7, 64, 8, 8)]
+)
+def test_encode_kernel_matches_ref(n, d, k, v):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n))
+    x = jax.random.normal(k1, (n, d))
+    P = jax.random.normal(k2, (d // v, k, v))
+    out = encode_pallas(x, P, block_n=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(encode_ref(x, P)))
+
+
+def test_kernel_argmin_tie_break(key):
+    """Duplicate centroids: kernel must pick the lowest index like jnp."""
+    P = jnp.zeros((1, 4, 4)).at[0, 1].set(1.0)      # rows 0,2,3 identical
+    x = jnp.zeros((8, 4))
+    out = encode_pallas(x, P, interpret=True)
+    assert int(jnp.max(out)) == 0

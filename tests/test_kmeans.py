@@ -1,0 +1,58 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import kmeans, pq
+
+
+def test_inertia_decreases_with_iters(key):
+    x = jax.random.normal(key, (256, 8))
+    _, i5 = kmeans.kmeans(key, x, k=8, iters=5)
+    _, i25 = kmeans.kmeans(key, x, k=8, iters=25)
+    assert float(i25) <= float(i5) + 1e-3
+
+
+def test_recovers_separated_clusters(key):
+    k1, k2 = jax.random.split(key)
+    centers = jax.random.normal(k1, (4, 6)) * 10.0
+    pts = centers[jax.random.randint(k2, (400,), 0, 4)] + 0.05 * jax.random.normal(k2, (400, 6))
+    learned, inertia = kmeans.kmeans(key, pts, k=4, iters=30)
+    # every true center has a learned centroid within 0.5
+    d = jnp.min(jnp.sum((centers[:, None] - learned[None]) ** 2, -1), axis=1)
+    assert float(jnp.max(d)) < 0.25
+    assert float(inertia) / 400 < 0.1
+
+
+def test_no_dead_centroids(key):
+    """k > #distinct points still yields finite centroids (reseed path)."""
+    x = jnp.concatenate([jnp.zeros((50, 4)), jnp.ones((50, 4))])
+    c, _ = kmeans.kmeans(key, x, k=8, iters=10)
+    assert bool(jnp.all(jnp.isfinite(c)))
+
+
+def test_per_codebook_shapes(key):
+    acts = jax.random.normal(key, (128, 24))
+    cents = kmeans.kmeans_per_codebook(key, acts, k=4, v=8)
+    assert cents.shape == (3, 4, 8)
+
+
+def test_kmeans_beats_random_centroids(key):
+    """k-means init gives lower PQ reconstruction error than random init —
+    the reason the paper seeds soft-PQ with k-means (section 3.1)."""
+    k1, k2 = jax.random.split(key)
+    centers = jax.random.normal(k1, (16, 16)) * 3
+    acts = centers[jax.random.randint(k2, (512,), 0, 16)] + 0.3 * jax.random.normal(k2, (512, 16))
+    km = kmeans.kmeans_per_codebook(key, acts, k=8, v=4)
+    rnd = jax.random.normal(key, km.shape)
+    err_km = float(jnp.mean((pq.pq_reconstruct(acts, km) - acts) ** 2))
+    err_rnd = float(jnp.mean((pq.pq_reconstruct(acts, rnd) - acts) ** 2))
+    assert err_km < 0.5 * err_rnd
+
+
+def test_determinism(key):
+    x = jax.random.normal(key, (64, 4))
+    a, _ = kmeans.kmeans(key, x, k=4, iters=5)
+    b, _ = kmeans.kmeans(key, x, k=4, iters=5)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

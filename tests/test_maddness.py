@@ -1,0 +1,43 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import maddness, pq
+
+
+def test_encode_in_range(key):
+    acts = np.asarray(jax.random.normal(key, (256, 16)))
+    tree = maddness.fit_hash_trees(acts, k=8, v=4)
+    idx = maddness.maddness_encode(jnp.asarray(acts), tree, 4)
+    assert idx.shape == (256, 4)
+    assert int(idx.min()) >= 0 and int(idx.max()) < 8
+
+
+def test_balanced_split(key):
+    """Median thresholds keep buckets roughly balanced on training data."""
+    acts = np.asarray(jax.random.normal(key, (512, 8)))
+    tree = maddness.fit_hash_trees(acts, k=4, v=8)
+    idx = np.asarray(maddness.maddness_encode(jnp.asarray(acts), tree, 8))[:, 0]
+    counts = np.bincount(idx, minlength=4)
+    assert counts.min() > 512 // 4 // 4  # no bucket starved
+
+
+def test_hashing_worse_than_kmeans(key):
+    """Paper section 2.1/Fig. 3: hashing encodes with HIGHER quantization
+    error than k-means distance encoding."""
+    from repro.core import kmeans
+
+    k1, k2 = jax.random.split(key)
+    centers = jax.random.normal(k1, (8, 16)) * 2
+    acts = centers[jax.random.randint(k2, (512,), 0, 8)] + 0.3 * jax.random.normal(k2, (512, 16))
+    acts_np = np.asarray(acts)
+
+    tree = maddness.fit_hash_trees(acts_np, k=8, v=4)
+    protos = maddness.bucket_prototypes(acts_np, tree, k=8, v=4)
+    idx = maddness.maddness_encode(acts, tree, 4)
+    rec_h = protos[jnp.arange(4)[None, :], idx]             # (N, C, V)
+    err_h = float(jnp.mean((rec_h.reshape(512, 16) - acts) ** 2))
+
+    km = kmeans.kmeans_per_codebook(key, acts, k=8, v=4)
+    err_k = float(jnp.mean((pq.pq_reconstruct(acts, km) - acts) ** 2))
+    assert err_k < err_h

@@ -1,0 +1,166 @@
+"""Unit + hypothesis property tests for the PQ core (paper Eqs. 1-6)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import pq
+from repro.core.temperature import init_log_temperature, temperature
+
+hypothesis.settings.register_profile(
+    "fast", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("fast")
+
+
+def _mk(key, n, d, m, k, v):
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, d))
+    P = jax.random.normal(k2, (d // v, k, v))
+    W = jax.random.normal(k3, (d, m))
+    return x, P, W
+
+
+def test_split_subvectors_roundtrip(key):
+    x = jax.random.normal(key, (5, 12))
+    assert pq.split_subvectors(x, 4).shape == (5, 3, 4)
+    np.testing.assert_array_equal(
+        np.asarray(pq.split_subvectors(x, 4).reshape(5, 12)), np.asarray(x)
+    )
+    with pytest.raises(ValueError):
+        pq.split_subvectors(x, 5)
+
+
+def test_distances_match_naive(key):
+    x, P, _ = _mk(key, 7, 8, 3, 4, 2)
+    sub = pq.split_subvectors(x, 2)
+    d = pq.pairwise_sq_dists(sub, P)
+    naive = np.zeros((7, 4, 4))
+    for n in range(7):
+        for c in range(4):
+            for kk in range(4):
+                naive[n, c, kk] = np.sum(
+                    (np.asarray(sub[n, c]) - np.asarray(P[c, kk])) ** 2
+                )
+    np.testing.assert_allclose(np.asarray(d), naive, rtol=1e-4, atol=1e-4)
+
+
+def test_hard_encode_is_argmin_onehot(key):
+    x, P, _ = _mk(key, 16, 8, 3, 4, 2)
+    d = pq.pairwise_sq_dists(pq.split_subvectors(x, 2), P)
+    enc = pq.hard_encode(d)
+    assert np.allclose(np.asarray(enc.sum(-1)), 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(enc, -1)), np.asarray(jnp.argmin(d, -1))
+    )
+
+
+def test_ste_forward_equals_hard_backward_soft(key):
+    x, P, W = _mk(key, 8, 8, 6, 4, 2)
+    d = pq.pairwise_sq_dists(pq.split_subvectors(x, 2), P)
+    t = jnp.asarray(0.7)
+    ste = pq.ste_encode(d, t)
+    np.testing.assert_allclose(
+        np.asarray(ste), np.asarray(pq.hard_encode(d)), atol=1e-6
+    )
+    # gradient flows through the soft branch
+    g_ste = jax.grad(lambda dd: jnp.sum(pq.ste_encode(dd, t) ** 2))(d)
+    g_soft_of_hard = jax.grad(lambda dd: jnp.sum(pq.hard_encode(dd) ** 2))(d)
+    assert float(jnp.abs(g_ste).sum()) > 0
+    assert float(jnp.abs(g_soft_of_hard).sum()) == 0  # argmin alone: no grads
+
+
+def test_soft_approaches_hard_as_t_to_zero(key):
+    # controlled distance gaps (>=0.25) so the limit is well-conditioned;
+    # random data can produce near-ties where soft correctly stays at ~0.5
+    d = jax.random.uniform(key, (32, 3, 4)) * 0.1
+    d = d + 0.25 * jnp.argsort(jax.random.uniform(jax.random.PRNGKey(7), (32, 3, 4)), -1)
+    hard = pq.hard_encode(d)
+    for t, tol in ((1e-2, 1e-5), (1e-3, 1e-9)):
+        soft = pq.soft_encode(d, jnp.asarray(t))
+        assert float(jnp.max(jnp.abs(soft - hard))) < tol
+
+
+def test_centroid_exactness(key):
+    """AMM is EXACT when input rows are themselves centroids (paper: the
+    approximation error is entirely input-to-centroid distance)."""
+    x, P, W = _mk(key, 8, 8, 6, 4, 2)
+    # build inputs whose sub-vectors are centroid rows
+    idx = jax.random.randint(key, (8, 4), 0, 4)
+    a = jnp.take_along_axis(P[None], idx[:, :, None, None], axis=2)[:, :, 0].reshape(8, 8)
+    T = pq.build_table(P, W, stop_weight_grad=False)
+    enc = pq.hard_encode(pq.pairwise_sq_dists(pq.split_subvectors(a, 2), P))
+    out = pq.lut_contract(enc, T)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ W), rtol=1e-4, atol=1e-4)
+
+
+def test_gather_matches_onehot(key):
+    x, P, W = _mk(key, 9, 8, 5, 4, 2)
+    T = pq.build_table(P, W, stop_weight_grad=False)
+    idx = pq.encode_indices(x, P)
+    g = pq.gather_lut(idx, T)
+    enc = pq.hard_encode(pq.pairwise_sq_dists(pq.split_subvectors(x, 2), P))
+    o = pq.lut_contract(enc, T)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(o), rtol=1e-5, atol=1e-5)
+
+
+def test_build_table_stops_weight_grad(key):
+    x, P, W = _mk(key, 4, 8, 5, 4, 2)
+
+    def f(w):
+        return jnp.sum(pq.build_table(P, w) ** 2)
+
+    g = jax.grad(f)(W)
+    assert float(jnp.abs(g).sum()) == 0.0
+    g2 = jax.grad(lambda w: jnp.sum(pq.build_table(P, w, stop_weight_grad=False) ** 2))(W)
+    assert float(jnp.abs(g2).sum()) > 0.0
+
+
+def test_temperature_param():
+    lt = init_log_temperature(1.0)
+    assert float(temperature(lt)) == pytest.approx(1.0)
+    assert float(temperature(jnp.asarray(-50.0))) >= 0.99e-4  # floor (fp32)
+
+
+@given(
+    n=st.integers(2, 12),
+    c=st.integers(1, 4),
+    k=st.integers(2, 8),
+    v=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_property_reconstruction_error_le_worst_centroid(n, c, k, v, seed):
+    """PQ reconstruction picks the NEAREST centroid: its distance is <= the
+    distance to any other centroid, per codebook (Lloyd optimality of the
+    encoding step, Eq. 2)."""
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    x = jax.random.normal(k1, (n, c * v))
+    P = jax.random.normal(k2, (c, k, v))
+    d = pq.pairwise_sq_dists(pq.split_subvectors(x, v), P)
+    chosen = jnp.min(d, -1)
+    assert bool(jnp.all(chosen[..., None] <= d + 1e-6))
+
+
+@given(
+    n=st.integers(2, 10),
+    k=st.integers(2, 6),
+    v=st.integers(1, 4),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_property_amm_linear_in_weight(n, k, v, m, seed):
+    """h^c (Eq. 3) and the AMM output are linear in W: AMM(x; aW) = a*AMM."""
+    kk = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(kk, 3)
+    x = jax.random.normal(k1, (n, 2 * v))
+    P = jax.random.normal(k2, (2, k, v))
+    W = jax.random.normal(k3, (2 * v, m))
+    enc = pq.hard_encode(pq.pairwise_sq_dists(pq.split_subvectors(x, v), P))
+    o1 = pq.lut_contract(enc, pq.build_table(P, 3.0 * W, stop_weight_grad=False))
+    o2 = 3.0 * pq.lut_contract(enc, pq.build_table(P, W, stop_weight_grad=False))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,52 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import hypothesis.strategies as st
+from hypothesis import given
+
+from repro.core import quant
+
+
+def test_roundtrip_error_bound(key):
+    T = jax.random.normal(key, (3, 4, 8)) * 5
+    qt = quant.quantize_table(T, bits=8)
+    err = jnp.abs(qt.dequant(jnp.float32) - T)
+    # symmetric linear quant: |err| <= scale/2 per codebook
+    assert bool(jnp.all(err <= qt.scale / 2 + 1e-6))
+    assert qt.q.dtype == jnp.int8
+
+
+def test_int4_range(key):
+    T = jax.random.normal(key, (2, 4, 4))
+    qt = quant.quantize_table(T, bits=4)
+    assert int(jnp.max(jnp.abs(qt.q))) <= 7
+
+
+def test_per_column_scales_tighter(key):
+    """Per-column scales (our beyond-paper variant) never increase error."""
+    T = jax.random.normal(key, (2, 8, 16)) * jnp.logspace(-2, 1, 16)[None, None, :]
+    e_tab = jnp.mean((quant.quantize_table(T, bits=8).dequant(jnp.float32) - T) ** 2)
+    e_col = jnp.mean(
+        (quant.quantize_table(T, bits=8, per_column=True).dequant(jnp.float32) - T) ** 2
+    )
+    assert float(e_col) < float(e_tab)
+
+
+def test_fake_quant_ste(key):
+    T = jax.random.normal(key, (2, 4, 8))
+    fq = quant.fake_quant(T, bits=8)
+    qt = quant.quantize_table(T, bits=8)
+    np.testing.assert_allclose(
+        np.asarray(fq), np.asarray(qt.dequant(jnp.float32)), rtol=1e-6, atol=1e-6
+    )
+    # backward: exact identity (straight-through)
+    g = jax.grad(lambda t: jnp.sum(quant.fake_quant(t, bits=8) * 3.0))(T)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones_like(g), rtol=1e-6)
+
+
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 1000))
+def test_property_quant_idempotent(bits, seed):
+    T = jax.random.normal(jax.random.PRNGKey(seed), (2, 4, 4))
+    once = quant.fake_quant(T, bits=bits)
+    twice = quant.fake_quant(once, bits=bits)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), rtol=1e-4, atol=1e-5)

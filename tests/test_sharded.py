@@ -1,0 +1,201 @@
+"""Multi-device correctness (subprocess with forced host devices):
+sharded train step == single-device reference; dry-run of a reduced arch
+on a 2x4 mesh; grad compression; roofline collective parser."""
+
+import textwrap
+
+from tests._subproc import run_with_devices
+
+
+def test_sharded_train_matches_single_device():
+    out = run_with_devices(
+        textwrap.dedent(
+            """
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.configs import build_model, get_arch, reduce_arch
+            from repro.core.amm import Mode
+            from repro.data import MarkovLM
+            from repro.distributed.sharding import ShardingRules
+            from repro.optim import AdamW
+            from repro.train.train_step import make_train_step
+
+            arch = reduce_arch(get_arch("llama3_8b"), n_layers=2, vocab=64, d_model=64, d_ff=128)
+            data = MarkovLM(vocab=arch.vocab, seq_len=16, batch=8)
+            bundle = build_model(arch, Mode.DENSE)
+            params = bundle.init(jax.random.PRNGKey(0))
+            opt = AdamW(lr=1e-2, clip_norm=None)
+            ostate = opt.init(params)
+            batch = data.batch_at(0)
+            step = make_train_step(bundle, opt, compute_dtype=jnp.float32)
+
+            # single-device reference
+            p_ref, _, m_ref = jax.jit(step)(params, ostate, batch)
+
+            mesh = jax.make_mesh((2, 4), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            rules = ShardingRules(mesh)
+            ps = rules.params_shardings(jax.eval_shape(lambda: params))
+            os_ = rules.opt_shardings(jax.eval_shape(lambda: ostate))
+            bs = rules.batch_shardings({k: jax.eval_shape(lambda v=v: v) for k, v in batch.items()})
+            with mesh:
+                p_sh, _, m_sh = jax.jit(
+                    step, in_shardings=(ps, os_, bs), out_shardings=(ps, os_, None)
+                )(jax.device_put(params, ps), jax.device_put(ostate, os_),
+                  {k: jax.device_put(v, bs[k]) for k, v in batch.items()})
+
+            assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 1e-4, (m_ref, m_sh)
+            for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_sh)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-2, atol=1e-3)
+            print("SHARDED_OK")
+            """
+        ),
+        n_devices=8,
+    )
+    assert "SHARDED_OK" in out
+
+
+def test_reduced_dryrun_lut_modes():
+    """Reduced arch lowers+compiles on a mesh in both serve and train LUT
+    modes — the same path launch/dryrun.py runs at 512 devices."""
+    out = run_with_devices(
+        textwrap.dedent(
+            """
+            import jax, jax.numpy as jnp
+            from repro.configs import build_model, get_arch, reduce_arch
+            from repro.core.amm import Mode
+            from repro.distributed.sharding import ShardingRules
+            from repro.optim import AdamW, SOFT_PQ_RULES, lut_frozen_mask
+            from repro.train.train_step import make_train_step, make_serve_step
+            from repro.roofline.analysis import analyze_compiled
+
+            arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, vocab=64)
+            mesh = jax.make_mesh((2, 4), ("data", "model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            rules = ShardingRules(mesh)
+
+            bundle = build_model(arch, Mode.LUT_TRAIN)
+            pspecs = bundle.param_specs()
+            opt = AdamW(lr=1e-3, rules=SOFT_PQ_RULES)
+            frozen = lut_frozen_mask(pspecs)
+            ospecs = jax.eval_shape(lambda p: opt.init(p, frozen), pspecs)
+            batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+            with mesh:
+                c = jax.jit(
+                    make_train_step(bundle, opt, frozen_mask=frozen, compute_dtype=jnp.float32),
+                    in_shardings=(rules.params_shardings(pspecs),
+                                  rules.opt_shardings(ospecs),
+                                  rules.batch_shardings(batch)),
+                ).lower(pspecs, ospecs, batch).compile()
+            r = analyze_compiled(c)
+            assert r.flops > 0
+            print("TRAIN_LOWERED", r.bottleneck)
+
+            binf = build_model(arch, Mode.LUT_INFER)
+            ispecs = binf.param_specs()
+            cspecs = binf.init_caches(8, 32, abstract=True)
+            sbatch = {"tokens": jax.ShapeDtypeStruct((8, 1), jnp.int32),
+                      "cache_len": jax.ShapeDtypeStruct((8,), jnp.int32)}
+            with mesh:
+                c2 = jax.jit(
+                    make_serve_step(binf, compute_dtype=jnp.float32),
+                    in_shardings=(rules.params_shardings(ispecs),
+                                  rules.batch_shardings(sbatch),
+                                  rules.cache_shardings(cspecs, 8)),
+                ).lower(ispecs, sbatch, cspecs).compile()
+            print("SERVE_LOWERED", analyze_compiled(c2).bottleneck)
+            """
+        ),
+        n_devices=8,
+    )
+    assert "TRAIN_LOWERED" in out and "SERVE_LOWERED" in out
+
+
+def test_grad_compression_matches_exact():
+    out = run_with_devices(
+        textwrap.dedent(
+            """
+            import jax, jax.numpy as jnp
+            from repro.train.grad_compression import make_compressed_grad_fn, init_residual
+            mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+            def loss_fn(params, batch):
+                return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+            key = jax.random.PRNGKey(0)
+            params = {"w": jax.random.normal(key, (16, 4))}
+            batch = {"x": jax.random.normal(key, (32, 16)), "y": jax.random.normal(key, (32, 4))}
+            fn = jax.jit(make_compressed_grad_fn(loss_fn, mesh))
+            loss, grads, res = fn(params, init_residual(params), batch)
+            loss_ref, grads_ref = jax.value_and_grad(loss_fn)(params, batch)
+            err = float(jnp.max(jnp.abs(grads["w"] - grads_ref["w"]))
+                        / jnp.max(jnp.abs(grads_ref["w"])))
+            assert abs(float(loss) - float(loss_ref)) < 1e-5
+            assert err < 0.05, err
+            # error feedback: residual is exactly what int8 dropped
+            assert float(jnp.max(jnp.abs(res["w"]))) > 0
+            print("GC_OK", err)
+            """
+        ),
+        n_devices=8,
+    )
+    assert "GC_OK" in out
+
+
+def test_elastic_rescale_8_to_4():
+    out = run_with_devices(
+        textwrap.dedent(
+            """
+            import numpy as np
+            import jax, jax.numpy as jnp
+            from repro.configs import build_model, get_arch, reduce_arch
+            from repro.core.amm import Mode
+            from repro.checkpoint.checkpointer import Checkpointer
+            from repro.data import MarkovLM
+            from repro.distributed.elastic import ElasticContext
+            from repro.optim import AdamW
+            from repro.train.train_step import make_train_step
+            import tempfile
+
+            arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, vocab=64, d_model=64, d_ff=128)
+            data = MarkovLM(vocab=arch.vocab, seq_len=16, batch=8)
+            bundle = build_model(arch, Mode.DENSE)
+            opt = AdamW(lr=3e-3)
+            step_raw = make_train_step(bundle, opt, compute_dtype=jnp.float32)
+
+            def make_step(mesh, rules):
+                return jax.jit(step_raw)
+
+            params = bundle.init(jax.random.PRNGKey(0))
+            ostate = opt.init(params)
+
+            ckdir = tempfile.mkdtemp()
+            ck = Checkpointer(ckdir)
+
+            # phase 1: all 8 devices
+            ctx8 = ElasticContext.build(jax.devices(), make_step, prefer_model=2)
+            ps = ctx8.rules.params_shardings(jax.eval_shape(lambda: params))
+            params = jax.device_put(params, ps)
+            losses = []
+            for i in range(6):
+                params, ostate, m = ctx8.step_fn(params, ostate, data.batch_at(i))
+                losses.append(float(m["loss"]))
+            ck.save(6, {"params": params, "opt": ostate}, blocking=True)
+
+            # phase 2: "node failure" -> only 4 devices survive
+            ctx4 = ElasticContext.build(jax.devices()[:4], make_step, prefer_model=2)
+            ps4 = ctx4.rules.params_shardings(jax.eval_shape(lambda: params))
+            os4 = ctx4.rules.opt_shardings(jax.eval_shape(lambda: ostate))
+            step, tree = ck.restore({"params": params, "opt": ostate},
+                                    shardings={"params": ps4, "opt": os4})
+            params2, ostate2 = tree["params"], tree["opt"]
+            for i in range(step, step + 6):
+                params2, ostate2, m = ctx4.step_fn(params2, ostate2, data.batch_at(i))
+                losses.append(float(m["loss"]))
+            assert step == 6
+            assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
+            assert all(np.isfinite(losses)), losses
+            print("ELASTIC_OK", [round(l, 3) for l in losses])
+            """
+        ),
+        n_devices=8,
+    )
+    assert "ELASTIC_OK" in out

@@ -1,0 +1,136 @@
+"""Trainer integration: learning, checkpoint/restart, failure recovery,
+straggler detection, LUT fine-tuning vs direct PQ (the paper's core claim)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core import convert
+from repro.core.amm import Mode
+from repro.data import MarkovLM
+from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, vocab=64, d_model=64, d_ff=128)
+    data = MarkovLM(vocab=arch.vocab, seq_len=24, batch=8, branching=4)
+    bundle = build_model(arch, Mode.DENSE)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return arch, data, bundle, params
+
+
+def test_loss_decreases(small_setup, tmp_path):
+    arch, data, bundle, params = small_setup
+    opt = AdamW(lr=3e-3)
+    tr = Trainer(
+        step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=30, ckpt_every=100, ckpt_dir=str(tmp_path), log_every=0),
+    )
+    tr.fit(params, opt.init(params), start_step=0)
+    first = np.mean([h["loss"] for h in tr.history[:5]])
+    last = np.mean([h["loss"] for h in tr.history[-5:]])
+    assert last < first - 0.3
+
+
+def test_checkpoint_restart_exact(small_setup, tmp_path):
+    arch, data, bundle, params = small_setup
+    opt = AdamW(lr=1e-3)
+
+    def mk(ckpt_dir):
+        return Trainer(
+            step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
+            batch_at=data.batch_at,
+            cfg=TrainerConfig(total_steps=12, ckpt_every=6, ckpt_dir=ckpt_dir, log_every=0),
+        )
+
+    # uninterrupted run
+    t1 = mk(str(tmp_path / "a"))
+    p1, _ = t1.fit(params, opt.init(params), start_step=0)
+
+    # interrupted at step 6 (fresh trainer resumes from ckpt: deterministic data)
+    t2 = mk(str(tmp_path / "b"))
+    t2.cfg.total_steps = 6
+    t2.fit(params, opt.init(params), start_step=0)
+    t3 = mk(str(tmp_path / "b"))
+    t3.cfg.total_steps = 12
+    p3, _ = t3.fit(params, opt.init(params))     # resumes at 6
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_failure_recovery(small_setup, tmp_path):
+    arch, data, bundle, params = small_setup
+    opt = AdamW(lr=1e-3)
+    tr = Trainer(
+        step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=10, ckpt_every=4, ckpt_dir=str(tmp_path), log_every=0,
+                          max_retries=1),
+        fail_at=6,
+        fail_exc=RuntimeError("simulated preemption"),
+    )
+    tr.fit(params, opt.init(params), start_step=0)
+    steps = [h["step"] for h in tr.history]
+    assert steps[-1] == 9 and 6 in steps           # recovered and completed
+
+
+def test_straggler_monitor():
+    from repro.distributed.fault_tolerance import StragglerMonitor
+
+    m = StragglerMonitor(threshold=2.0, warmup_steps=3)
+    for i in range(10):
+        assert not m.record(i, 0.1)
+    assert m.record(99, 0.5)                        # 5x EMA -> flagged
+    assert m.events and m.events[0]["step"] == 99
+    assert not m.record(100, 0.11)                  # recovery not flagged
+
+
+def test_lut_finetune_beats_direct_pq(small_setup, tmp_path):
+    """Paper Fig. 3 / Table 4 in miniature: direct PQ (k-means only)
+    degrades the model; soft-PQ fine-tuning recovers it."""
+    arch, data, bundle, params = small_setup
+    opt = AdamW(lr=3e-3)
+    tr = Trainer(
+        step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=40, ckpt_every=100, ckpt_dir=str(tmp_path), log_every=0),
+    )
+    params, _ = tr.fit(params, opt.init(params), start_step=0)
+    dense_loss = float(bundle.loss(params, data.batch_at(999), compute_dtype=jnp.float32))
+
+    samples = [data.batch_at(500 + i) for i in range(2)]
+    blut, lparams = convert.convert_dense_to_lut_train(
+        bundle, params, samples, jax.random.PRNGKey(1)
+    )
+    direct_pq_loss = float(blut.loss(lparams, data.batch_at(999), compute_dtype=jnp.float32))
+
+    frozen = lut_frozen_mask(lparams)
+    opt2 = AdamW(lr=1e-3, rules=SOFT_PQ_RULES)
+    step = jax.jit(make_train_step(blut, opt2, frozen_mask=frozen, compute_dtype=jnp.float32))
+    ostate = opt2.init(lparams, frozen)
+    for i in range(40):
+        lparams, ostate, _ = step(lparams, ostate, data.batch_at(i))
+    ft_loss = float(blut.loss(lparams, data.batch_at(999), compute_dtype=jnp.float32))
+
+    assert ft_loss < direct_pq_loss                 # soft-PQ improves on raw PQ
+    assert ft_loss < dense_loss + 0.5               # and lands near the original
+
+
+def test_grad_accum_equivalent(small_setup):
+    """grad_accum=2 must match a single full-batch step (same grads)."""
+    arch, data, bundle, params = small_setup
+    opt = AdamW(lr=1e-3, clip_norm=None)
+    s1 = jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32, grad_accum=1))
+    s2 = jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32, grad_accum=2))
+    batch = data.batch_at(0)
+    p1, _, m1 = s1(params, opt.init(params), batch)
+    p2, _, m2 = s2(params, opt.init(params), batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
