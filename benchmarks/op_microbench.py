@@ -1,22 +1,33 @@
-"""Paper Fig. 7 analog: per-operator cost, dense vs LUT-NN.
+"""Paper Fig. 7 analog: per-operator cost, dense vs LUT-NN, v1 vs v2 kernel.
 
-Real TPU wall-clock is unavailable here, so this reports BOTH:
-  * measured CPU wall-clock of the XLA one-hot LUT path vs dense matmul
-    (honest but CPU-flavored), and
-  * the derived v5e roofline time per op (bytes/819GBps vs flops/197TFLOPs)
-    for dense-bf16 vs LUT-int8-table — the decode-regime byte advantage is
-    the paper's memory/latency claim transposed to TPU (DESIGN.md §2).
+Real TPU wall-clock is unavailable here, so this reports THREE views per op:
+
+  * measured CPU wall-clock of the XLA paths — dense matmul, fp32 one-hot
+    LUT, int8-dot LUT (honest but CPU-flavored);
+  * measured wall-clock of the Pallas kernels, v1 vs v2, in interpret mode
+    on an N-capped slice (interpret executes the kernel body through XLA —
+    it exercises the exact kernel dataflow but does NOT model MXU int8
+    throughput, so off-TPU these columns track emulation cost only);
+  * the autotuner's analytic v5e roofline projection for the FULL shape,
+    v1 vs v2, at the autotuned block sizes (DESIGN.md §3) — the number a
+    real TPU run regresses against.
+
+With `json_path` set (benchmarks/run.py --json) the rows are written to
+BENCH_kernels.json so future PRs have a perf trajectory to regress against.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import pq, quant
-from repro.core.amm import LUTConfig
+from repro.kernels import autotune, ops
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 
 OPS = [
@@ -26,9 +37,16 @@ OPS = [
     ("llama3_ffn_gate", 256, 4096, 14336, 16, 32),
 ]
 
+# interpret-mode kernels run the grid as emulated XLA steps on CPU — cap the
+# row count so the measured v1/v2 comparison stays cheap. The full-shape
+# numbers come from the analytic roofline projection.
+KERNEL_N_CAP = 64
 
-def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+
+def _time(fn, *args, iters: int = 3) -> float:
+    """Median-free mean wall-clock per call; exactly one warmup execution."""
+    out = fn(*args)
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -36,41 +54,119 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
-def main() -> None:
+def bench_op(name: str, n: int, d: int, m: int, k: int, v: int) -> dict:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    w = jax.random.normal(key, (d, m), jnp.float32)
+    P = jax.random.normal(key, (d // v, k, v))
+    table = pq.build_table(P, w, stop_weight_grad=False)
+    qt = quant.quantize_table(table)
+    qt_sh = quant.quantize_table(table, m_shared=True)
+
+    dense_fn = jax.jit(lambda x, w: x @ w)
+
+    def lut_fn(x, P, tq, ts):
+        tbl = tq.astype(jnp.float32) * ts
+        enc = pq.hard_encode(pq.pairwise_sq_dists(pq.split_subvectors(x, v), P))
+        return pq.lut_contract(enc, tbl)
+
+    def lut_i8_fn(x, P, tq, ts):
+        enc = pq.hard_encode(pq.pairwise_sq_dists(pq.split_subvectors(x, v), P))
+        return pq.lut_contract_int8(enc, tq, ts)
+
+    t_dense = _time(dense_fn, x, w) * 1e3
+    t_lut = _time(jax.jit(lut_fn), x, P, qt.q, qt.scale) * 1e3
+    t_lut_i8 = _time(jax.jit(lut_i8_fn), x, P, qt_sh.q, qt_sh.scale) * 1e3
+
+    # Pallas v1 vs v2, measured (interpret off-TPU) on the N-capped slice
+    # with autotuned v2 blocks.
+    nk = min(n, KERNEL_N_CAP)
+    c = d // v
+    blk, _ = autotune.tune("lut_amm", n, m, c, k, v, save=False)
+    bn, bm, bc = min(blk.block_n, nk), blk.block_m, blk.block_c
+    xk = x[:nk]
+    t_v1 = _time(
+        lambda *a: ops.lut_amm_v1(*a, block_n=bn, block_m=bm, block_c=bc),
+        xk, P, qt_sh.q, jnp.broadcast_to(qt_sh.scale, (c, 1, m)),
+        iters=2,
+    ) * 1e3
+    t_v2 = _time(
+        lambda *a: ops.lut_amm(*a, block_n=bn, block_m=bm, block_c=bc),
+        xk, P, qt_sh.q, qt_sh.scale,
+        iters=2,
+    ) * 1e3
+
+    # full-shape analytic roofline projection at the tuned blocks
+    v1_us = autotune.predict_us("lut_amm", n, m, c, k, v,
+                                blk.block_n, blk.block_m, blk.block_c, version=1)
+    v2_us = autotune.predict_us("lut_amm", n, m, c, k, v,
+                                blk.block_n, blk.block_m, blk.block_c, version=2)
+
+    # v5e roofline (decode regime: weight/table bytes dominate)
+    dense_bytes_ = d * m * 2 + (n * d + n * m) * 2
+    lut_bytes_ = c * k * m + c * k * v * 4 + (n * d + n * m) * 2
+    dense_flops_ = 2 * n * d * m
+    lut_flops_ = 2 * n * d * k + 2 * n * c * k * m   # one-hot MXU path
+    t_roof_dense = max(dense_bytes_ / HBM_BW, dense_flops_ / PEAK_FLOPS) * 1e6
+    t_roof_lut = max(lut_bytes_ / HBM_BW, lut_flops_ / PEAK_FLOPS) * 1e6
+
+    return {
+        "op": name,
+        "n": n, "d": d, "m": m, "k": k, "v": v,
+        "cpu_dense_ms": t_dense,
+        "cpu_lut_ms": t_lut,
+        "cpu_lut_int8_ms": t_lut_i8,
+        "kernel_n": nk,
+        "kernel_backend": "tpu" if jax.default_backend() == "tpu" else "interpret",
+        "pallas_v1_ms": t_v1,
+        "pallas_v2_ms": t_v2,
+        "tuned_block_n": blk.block_n,
+        "tuned_block_m": blk.block_m,
+        "tuned_block_c": blk.block_c,
+        "v1_model_us": v1_us,
+        "v2_model_us": v2_us,
+        "tpu_roofline_dense_us": t_roof_dense,
+        "tpu_roofline_lut_us": t_roof_lut,
+        "decode_byte_ratio": (d * m * 2) / (c * k * m),
+    }
+
+
+COLUMNS = (
+    "op", "cpu_dense_ms", "cpu_lut_ms", "cpu_lut_int8_ms",
+    "pallas_v1_ms", "pallas_v2_ms",
+    "tuned_block_n", "tuned_block_m", "tuned_block_c",
+    "v1_model_us", "v2_model_us",
+    "tpu_roofline_dense_us", "tpu_roofline_lut_us", "decode_byte_ratio",
+)
+
+
+def main(json_path: str | pathlib.Path | None = None) -> list[dict]:
     t0 = time.time()
-    print("# Fig. 7 analog: per-op dense vs LUT")
-    print("op,cpu_dense_ms,cpu_lut_ms,tpu_roofline_dense_us,tpu_roofline_lut_us,decode_byte_ratio")
+    print("# Fig. 7 analog: per-op dense vs LUT (xla/int8/pallas-v1/pallas-v2)")
+    print(",".join(COLUMNS))
+    rows = []
     for name, n, d, m, k, v in OPS:
-        cfg = LUTConfig(k=k, v=v)
-        key = jax.random.PRNGKey(0)
-        x = jax.random.normal(key, (n, d), jnp.float32)
-        w = jax.random.normal(key, (d, m), jnp.float32)
-        P = jax.random.normal(key, (d // v, k, v))
-        qt = quant.quantize_table(pq.build_table(P, w, stop_weight_grad=False))
-
-        dense_fn = jax.jit(lambda x, w: x @ w)
-        def lut_fn(x, P, tq, ts):
-            tbl = (tq.astype(jnp.float32) * ts)
-            enc = pq.hard_encode(pq.pairwise_sq_dists(pq.split_subvectors(x, v), P))
-            return pq.lut_contract(enc, tbl)
-        lut_jit = jax.jit(lut_fn)
-
-        t_dense = _time(dense_fn, x, w) * 1e3
-        t_lut = _time(lut_jit, x, P, qt.q, qt.scale) * 1e3
-
-        # v5e roofline (decode regime: weight/table bytes dominate)
-        dense_bytes_ = d * m * 2 + (n * d + n * m) * 2
-        lut_bytes_ = (d // v) * k * m + (d // v) * k * v * 4 + (n * d + n * m) * 2
-        dense_flops_ = 2 * n * d * m
-        lut_flops_ = 2 * n * d * k + 2 * n * (d // v) * k * m   # one-hot MXU path
-        t_roof_dense = max(dense_bytes_ / HBM_BW, dense_flops_ / PEAK_FLOPS) * 1e6
-        t_roof_lut = max(lut_bytes_ / HBM_BW, lut_flops_ / PEAK_FLOPS) * 1e6
-        print(
-            f"{name},{t_dense:.2f},{t_lut:.2f},{t_roof_dense:.1f},{t_roof_lut:.1f},"
-            f"{(d * m * 2) / ((d // v) * k * m):.2f}"
-        )
+        r = bench_op(name, n, d, m, k, v)
+        rows.append(r)
+        print(",".join(
+            f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
+            for c in COLUMNS
+        ))
+    if json_path is not None:
+        payload = {
+            "benchmark": "op_microbench",
+            "backend": jax.default_backend(),
+            "kernel_n_cap": KERNEL_N_CAP,
+            "rows": rows,
+        }
+        pathlib.Path(json_path).write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {json_path}")
     print(f"op_microbench,{(time.time()-t0)*1e6:.0f},cpu+roofline")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    # anchor at the repo root (same path run.py and roofline_table.py use),
+    # independent of the invocation cwd
+    _JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+    main(json_path=_JSON if "--json" in sys.argv else None)

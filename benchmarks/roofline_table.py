@@ -1,6 +1,7 @@
 """EXPERIMENTS.md section Roofline source: aggregate results/dryrun JSONs
 into the per-(arch x shape x mesh) three-term roofline table with
-MODEL_FLOPS ratios."""
+MODEL_FLOPS ratios, plus the per-op kernel axis (dense vs one-hot-XLA vs
+pallas-v1 vs pallas-v2) from BENCH_kernels.json when present."""
 
 from __future__ import annotations
 
@@ -10,6 +11,33 @@ import time
 
 _ROOT = pathlib.Path(__file__).resolve().parents[1] / "results"
 RESULTS = _ROOT / "final" if (_ROOT / "final").exists() else _ROOT / "dryrun"
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+
+
+def kernel_rows() -> list[dict]:
+    """Per-op kernel comparison from the microbench artifact (may be absent)."""
+    if not BENCH_JSON.exists():
+        return []
+    try:
+        return json.loads(BENCH_JSON.read_text()).get("rows", [])
+    except (OSError, ValueError):
+        return []
+
+
+def print_kernel_axis() -> None:
+    rs = kernel_rows()
+    if not rs:
+        return
+    print("# Kernel axis (from BENCH_kernels.json; model_us = v5e projection)")
+    print("op,dense_roofline_us,lut_xla_roofline_us,v1_model_us,v2_model_us,"
+          "blocks")
+    for r in rs:
+        print(
+            f"{r['op']},{r['tpu_roofline_dense_us']:.1f},"
+            f"{r['tpu_roofline_lut_us']:.1f},{r['v1_model_us']:.1f},"
+            f"{r['v2_model_us']:.1f},"
+            f"{r['tuned_block_n']}x{r['tuned_block_m']}x{r['tuned_block_c']}"
+        )
 
 
 def rows(suffix: str = "sp", tag: str | None = None):
@@ -45,6 +73,7 @@ def rows(suffix: str = "sp", tag: str | None = None):
 
 def main() -> None:
     t0 = time.time()
+    print_kernel_axis()
     for suffix, label in (("sp", "single-pod 16x16"), ("mp", "multi-pod 2x16x16")):
         rs = rows(suffix)
         if not rs:

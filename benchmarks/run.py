@@ -2,6 +2,9 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run table4_accuracy   # one artifact
+  PYTHONPATH=src python -m benchmarks.run --json op_microbench
+      # also write per-op microbench rows to BENCH_kernels.json so future
+      # PRs have a kernel-perf trajectory to regress against
 
 Each module prints its table as CSV plus `name,us_per_call,derived` at the
 end. The dry-run roofline tables (EXPERIMENTS.md sections Dry-run/Roofline)
@@ -10,6 +13,7 @@ are produced by benchmarks/roofline_table from results/dryrun/*.json.
 
 from __future__ import annotations
 
+import pathlib
 import sys
 import time
 import traceback
@@ -26,9 +30,13 @@ MODULES = [
     "roofline_table",
 ]
 
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+
 
 def main() -> None:
-    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    argv = sys.argv[1:]
+    json_mode = "--json" in argv
+    only = [a for a in argv if a != "--json"] or None
     failures = []
     for name in MODULES:
         if only and name not in only:
@@ -37,7 +45,10 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            if json_mode and name == "op_microbench":
+                mod.main(json_path=BENCH_JSON)
+            else:
+                mod.main()
         except Exception as e:  # noqa: BLE001 — keep the suite running
             failures.append((name, repr(e)))
             traceback.print_exc()

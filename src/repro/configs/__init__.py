@@ -75,6 +75,7 @@ class ArchSpec:
     lut_v: int = 32
     lut_bits: int = 8
     lut_int8_dot: bool = False          # integer one-hot contraction (section Perf)
+    lut_use_kernel: bool = False        # fused Pallas v2 kernel at LUT sites (DESIGN.md §2.3)
     lut_policy: str = "all_but_first"   # or "last_n:<n>" (BERT, Fig. 13), "all"
     # scale/precision policy for the production dry-run
     param_dtype: str = "float32"        # giants use bfloat16 (DESIGN.md section 5)
@@ -177,7 +178,10 @@ def _lut(arch: ArchSpec, d_in: int) -> LUTConfig:
     v = arch.lut_v
     while d_in % v:
         v //= 2
-    return LUTConfig(k=arch.lut_k, v=v, bits=arch.lut_bits, int8_dot=arch.lut_int8_dot)
+    return LUTConfig(
+        k=arch.lut_k, v=v, bits=arch.lut_bits,
+        int8_dot=arch.lut_int8_dot, use_kernel=arch.lut_use_kernel,
+    )
 
 
 def _site(arch: ArchSpec, d_in: int, d_out: int, mode: Mode, name: str = "") -> SiteCfg:

@@ -56,8 +56,10 @@ class LUTConfig:
     # with (1,1,M) scales (DESIGN.md section 2). Halves+ the decode memory
     # term by never materializing a dequantized bf16 table.
     int8_dot: bool = False
-    # Pallas fused kernel for LUT_INFER; False = pure-XLA one-hot path, which
-    # is what the multi-pod dry-run lowers (CPU backend can't emit Mosaic).
+    # Pallas fused v2 kernel for LUT_INFER (int8-native MXU table read +
+    # fused bias epilogue, autotuned blocks — DESIGN.md §2.3/§3); False =
+    # pure-XLA one-hot path, which is what the multi-pod dry-run lowers
+    # (CPU backend can't emit Mosaic).
     use_kernel: bool = False
 
     def codebooks(self, d: int) -> int:
@@ -106,20 +108,23 @@ def lut_linear(
         P = params["centroids"]
         qt = quant.QuantizedTable(params["table_q"], params["table_scale"])
         xf, lead = _flatten_lead(x)
+        b = params.get("b")
         if cfg.use_kernel:
             from repro.kernels import ops  # local import: kernels are optional
 
-            y = ops.lut_amm(xf, P, qt.q, qt.scale)
-        elif cfg.int8_dot:
-            dists = pq.pairwise_sq_dists(pq.split_subvectors(xf, cfg.v), P)
-            y = pq.lut_contract_int8(pq.hard_encode(dists), qt.q, qt.scale)
+            # bias rides the kernel's fused epilogue (DESIGN.md §2.3) — no
+            # separate elementwise pass over the (N, M) output.
+            y = ops.lut_amm(xf, P, qt.q, qt.scale, bias=b)
         else:
-            table = qt.dequant(dtype=x.dtype)
-            dists = pq.pairwise_sq_dists(pq.split_subvectors(xf, cfg.v), P)
-            enc = pq.hard_encode(dists).astype(x.dtype)
-            y = pq.lut_contract(enc, table)
-        b = params.get("b")
-        y = y + b.astype(y.dtype) if b is not None else y
+            if cfg.int8_dot:
+                dists = pq.pairwise_sq_dists(pq.split_subvectors(xf, cfg.v), P)
+                y = pq.lut_contract_int8(pq.hard_encode(dists), qt.q, qt.scale)
+            else:
+                table = qt.dequant(dtype=x.dtype)
+                dists = pq.pairwise_sq_dists(pq.split_subvectors(xf, cfg.v), P)
+                enc = pq.hard_encode(dists).astype(x.dtype)
+                y = pq.lut_contract(enc, table)
+            y = y + b.astype(y.dtype) if b is not None else y
         return y.reshape(*lead, -1).astype(x.dtype)
 
     raise ValueError(f"unknown mode {mode}")

@@ -57,8 +57,12 @@ def deploy_params(
 ) -> dict[str, Any]:
     """Materialize the inference LUT: int8 table + scales (drops the weight)."""
     table = pq.build_table(trainable["centroids"], frozen["w"], stop_weight_grad=False)
+    # int8_dot and the fused v2 kernel both want the m-shared (1,1,M) scale
+    # layout: it factors out of the codebook sum, so the kernel accumulates
+    # raw int32 and dequantizes once per output tile (DESIGN.md §2.3).
     qt = quant.quantize_table(
-        table, bits=cfg.bits, per_column=cfg.per_column, m_shared=cfg.int8_dot
+        table, bits=cfg.bits, per_column=cfg.per_column,
+        m_shared=cfg.int8_dot or cfg.use_kernel,
     )
     out = {
         "centroids": trainable["centroids"].astype(jnp.float32),
@@ -73,7 +77,7 @@ def deploy_params(
 def deploy_param_specs(d: int, m: int, cfg: LUTConfig, *, bias: bool = False) -> dict[str, Any]:
     """ShapeDtypeStruct stand-ins for the deployed LUT params (dry-run use)."""
     c = cfg.codebooks(d)
-    if cfg.int8_dot:
+    if cfg.int8_dot or cfg.use_kernel:
         s_shape = (1, 1, m)
     elif cfg.per_column:
         s_shape = (c, 1, m)

@@ -1,0 +1,368 @@
+"""Shape-keyed block-size autotuner for the LUT Pallas kernels (DESIGN.md §3).
+
+The fused kernels tile over a (N/bn, M/bm, C/bc) grid; the block sizes trade
+VMEM residency against HBM re-streaming:
+
+  * bigger bn  -> the int8 table tile is re-read fewer times (N/bn sweeps)
+  * bigger bm  -> the activation tile is re-read fewer times (M/bm sweeps)
+  * bigger bc  -> fewer grid steps (less per-step overhead), bigger VMEM tiles
+
+All three are capped by the per-step VMEM working set (`vmem_bytes`), which
+must fit in 16 MB with double buffering — the budget model is documented in
+DESIGN.md §3.1 and enforced by `enumerate_candidates`.
+
+Tuning modes:
+
+  * measured  — a `measure(cfg) -> seconds` callable (real wall-clock on an
+    accelerator; benchmarks pass one built from `lut_amm_pallas`).
+  * analytic  — no accelerator present: candidates are scored with the
+    roofline model in `predict_us` (HBM traffic / compute / per-step
+    overhead), using the v5e constants from repro.roofline.analysis.
+
+Winners persist to an on-disk JSON cache (DESIGN.md §3.2) keyed by
+(kind, N, M, C, K, V, dtype, backend) and are consumed by `lut_amm_pallas`,
+`encode_pallas`, the serving engine warmup, and the benchmarks. Cache path:
+$REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import os
+import pathlib
+import tempfile
+from typing import Any, Callable, Iterator
+
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+# ---------------------------------------------------------------------------
+# hardware model constants (DESIGN.md §3.1)
+# ---------------------------------------------------------------------------
+
+VMEM_BYTES = 16 * 2**20          # per-core VMEM (v4/v5 generations)
+VMEM_BUDGET = 12 * 2**20         # usable budget: leave headroom for spills
+MXU_F32 = PEAK_FLOPS             # dense fp32/bf16 MXU rate (paper constants)
+MXU_I8 = 2 * PEAK_FLOPS          # int8 MXU rate: 2x the bf16 rate on v5e
+VMEM_BW = 8 * HBM_BW             # rough on-chip bandwidth for VPU passes
+STEP_OVERHEAD_S = 1e-6           # fixed per-grid-step cost (DMA setup, sync)
+
+_CACHE_VERSION = 1
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """One tiling choice for a fused LUT kernel."""
+
+    block_n: int
+    block_m: int
+    block_c: int
+
+    def as_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _divisors(c: int) -> list[int]:
+    return [d for d in range(1, c + 1) if c % d == 0]
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget model (DESIGN.md §3.1)
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(
+    bn: int, bm: int, bc: int, k: int, v: int, *, kind: str = "lut_amm"
+) -> int:
+    """Per-step VMEM working set of the fused kernel at one tiling.
+
+    Input tiles are charged twice (the pipeline emitter double-buffers HBM
+    streams); the scratch accumulator and the output tile are single-buffered
+    because their BlockSpec index maps ignore the innermost grid axis.
+    """
+    x_tile = bn * bc * v * 4                 # fp32 activations
+    p_tile = bc * k * v * 4                  # fp32 codebook
+    if kind == "encode":
+        out = bn * bc * 4                    # int32 indices
+        return 2 * (x_tile + p_tile) + out
+    t_tile = bc * k * bm                     # int8 table — stays int8 (v2)
+    s_tile = bc * bm * 4                     # scale tile upper bound
+    b_tile = bm * 4                          # fused bias row
+    acc = bn * bm * 4                        # int32/f32 scratch accumulator
+    out = bn * bm * 4                        # fp32 output tile
+    return 2 * (x_tile + p_tile + t_tile + s_tile + b_tile) + acc + out
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model
+# ---------------------------------------------------------------------------
+
+def predict_us(
+    kind: str,
+    n: int, m: int, c: int, k: int, v: int,
+    bn: int, bm: int, bc: int,
+    *,
+    version: int = 2,
+) -> float:
+    """Roofline latency estimate (microseconds) for one tiling.
+
+    HBM traffic counts tile re-streaming exactly as the BlockSpec index maps
+    imply: the activation tile ignores the M grid axis (re-fetched per
+    M-block revisit), the table tile ignores the N grid axis (re-fetched per
+    N-block sweep), and the codebook tile is re-fetched whenever the C
+    coordinate cycles. Compute charges the encode matmul per M-block (the
+    fused kernel recomputes the argmin for every output tile) and the table
+    contraction once; v1 additionally pays a per-step fp32 dequantization of
+    the table tile on the VPU and contracts at the fp32 MXU rate, v2
+    contracts int8 at the doubled int8 MXU rate (DESIGN.md §2.3). The v1
+    dequant is charged additively (not under the roofline max): it is a
+    serial VPU pass between the DMA and the MXU contraction that consumes
+    its output, so it overlaps with neither.
+    """
+    gn, gm = _ceil_div(n, bn), (1 if kind == "encode" else _ceil_div(m, bm))
+    gc = _ceil_div(c, bc)
+
+    x_bytes = n * c * v * 4 * gm
+    p_bytes = c * k * v * 4 * gn * gm
+    enc_flops = 2.0 * n * c * v * k * gm
+
+    t_serial = 0.0
+    if kind == "encode":
+        hbm = x_bytes + p_bytes + n * c * 4
+        t_comp = enc_flops / MXU_F32
+    else:
+        t_bytes = c * k * m * gn             # int8 table, re-read per N sweep
+        o_bytes = n * m * 4                  # written exactly once (v2)
+        hbm = x_bytes + p_bytes + t_bytes + o_bytes
+        lut_flops = 2.0 * n * c * k * m
+        if version >= 2:
+            t_comp = enc_flops / MXU_F32 + lut_flops / MXU_I8
+        else:
+            # v1: int8 -> fp32 dequant materialization per codebook step
+            # (read int8 + write fp32 in VMEM), then an fp32 contraction.
+            t_comp = enc_flops / MXU_F32 + lut_flops / MXU_F32
+            t_serial = 5.0 * c * k * m * gn / VMEM_BW
+
+    t_mem = hbm / HBM_BW
+    t_steps = gn * gm * gc * STEP_OVERHEAD_S
+    return (max(t_mem, t_comp) + t_serial + t_steps) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration
+# ---------------------------------------------------------------------------
+
+_BN_CHOICES = (8, 16, 32, 64, 128, 256, 512)
+_BM_CHOICES = (128, 256, 512, 1024)
+
+
+def enumerate_candidates(
+    kind: str, n: int, m: int, c: int, k: int, v: int,
+    *, budget: int = VMEM_BUDGET,
+) -> Iterator[BlockConfig]:
+    """All tilings under the VMEM budget. Always yields at least one."""
+    bns = sorted({min(b, n) for b in _BN_CHOICES})
+    if kind == "encode":
+        bms = [0]
+    else:
+        bms = sorted({min(b, m) for b in _BM_CHOICES})
+    bcs = _divisors(c)
+    emitted = False
+    for bn in bns:
+        for bm in bms:
+            for bc in bcs:
+                if vmem_bytes(bn, max(bm, 1), bc, k, v, kind=kind) > budget:
+                    continue
+                emitted = True
+                yield BlockConfig(bn, bm, bc)
+    if not emitted:                           # degenerate: smallest tiling
+        yield BlockConfig(min(8, n), 0 if kind == "encode" else min(128, m), 1)
+
+
+def heuristic(kind: str, n: int, m: int, c: int, k: int, v: int) -> BlockConfig:
+    """Cache-miss default — the pre-autotuner hardcoded tiling."""
+    bn = min(512 if kind == "encode" else 256, n)
+    bm = 0 if kind == "encode" else min(512, m)
+    bc = max(1, min(c, 2048 // max(v, 1)))
+    while c % bc:
+        bc -= 1
+    return BlockConfig(bn, bm, bc)
+
+
+# ---------------------------------------------------------------------------
+# on-disk cache (DESIGN.md §3.2)
+# ---------------------------------------------------------------------------
+
+def shape_key(
+    kind: str, n: int, m: int, c: int, k: int, v: int,
+    dtype: str, backend: str,
+) -> str:
+    return f"{kind}|n={n}|m={m}|c={c}|k={k}|v={v}|dtype={dtype}|backend={backend}"
+
+
+def default_cache_path() -> pathlib.Path:
+    env = os.environ.get(_ENV_CACHE)
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+class AutotuneCache:
+    """JSON-backed winner store; safe against concurrent/partial writes."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = pathlib.Path(path) if path is not None else default_cache_path()
+        self._entries: dict[str, dict[str, Any]] | None = None
+
+    def load(self) -> dict[str, dict[str, Any]]:
+        if self._entries is None:
+            try:
+                raw = json.loads(self.path.read_text())
+                ok = isinstance(raw, dict) and raw.get("version") == _CACHE_VERSION
+                self._entries = dict(raw["entries"]) if ok else {}
+            except (OSError, ValueError, KeyError):
+                self._entries = {}
+        return self._entries
+
+    def get(self, key: str) -> dict[str, Any] | None:
+        return self.load().get(key)
+
+    def put(self, key: str, record: dict[str, Any]) -> None:
+        self.load()[key] = record
+        _memo_clear()
+
+    def save(self) -> None:
+        payload = {"version": _CACHE_VERSION, "entries": self.load()}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.unlink(tmp)
+            raise
+
+
+_DEFAULT_CACHE: AutotuneCache | None = None
+_MEMO: dict[str, BlockConfig] = {}
+
+
+def get_cache() -> AutotuneCache:
+    global _DEFAULT_CACHE
+    if _DEFAULT_CACHE is None or _DEFAULT_CACHE.path != default_cache_path():
+        _DEFAULT_CACHE = AutotuneCache()
+    return _DEFAULT_CACHE
+
+
+def _memo_clear() -> None:
+    _MEMO.clear()
+
+
+def _backend() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def lookup(
+    kind: str, n: int, m: int, c: int, k: int, v: int,
+    *, dtype: str = "float32", backend: str | None = None,
+    cache: AutotuneCache | None = None,
+) -> BlockConfig:
+    """Cheap hot-path lookup: cached winner, else the heuristic tiling.
+
+    Never runs tuning inline — `tune` (benchmarks / engine warmup) populates
+    the cache out-of-band.
+    """
+    backend = backend or _backend()
+    key = shape_key(kind, n, m, c, k, v, dtype, backend)
+    memo_key = None
+    if cache is None:
+        cache = get_cache()
+        # memo keyed by cache path too: switching $REPRO_AUTOTUNE_CACHE
+        # (e.g. per-test isolation) must not serve another cache's winners
+        memo_key = f"{cache.path}|{key}"
+        if memo_key in _MEMO:
+            return _MEMO[memo_key]
+    rec = cache.get(key)
+    if rec is not None:
+        cfg = BlockConfig(rec["block_n"], rec["block_m"], rec["block_c"])
+    else:
+        cfg = heuristic(kind, n, m, c, k, v)
+    if memo_key is not None:
+        _MEMO[memo_key] = cfg
+    return cfg
+
+
+def resolve_blocks(
+    kind: str, n: int, m: int, c: int, k: int, v: int, dtype: str,
+    block_n: int | None, block_m: int | None, block_c: int | None,
+) -> tuple[int, int, int]:
+    """Fill unspecified block sizes from the cache (or heuristic), then
+    clamp to legal values for this shape — the one block-resolution path
+    shared by `lut_amm_pallas` and `encode_pallas`."""
+    if block_n is None or block_m is None or block_c is None:
+        tuned = lookup(kind, n, m, c, k, v, dtype=dtype)
+        block_n = block_n if block_n is not None else tuned.block_n
+        block_m = block_m if block_m is not None else tuned.block_m
+        block_c = block_c if block_c is not None else tuned.block_c
+    bn = max(1, min(block_n, n))
+    bm = max(1, min(block_m, m)) if m else 0
+    bc = max(1, min(block_c, c))
+    while c % bc:
+        bc -= 1
+    return bn, bm, bc
+
+
+def tune(
+    kind: str, n: int, m: int, c: int, k: int, v: int,
+    *, dtype: str = "float32", backend: str | None = None,
+    cache: AutotuneCache | None = None,
+    measure: Callable[[BlockConfig], float] | None = None,
+    version: int = 2,
+    save: bool = True,
+) -> tuple[BlockConfig, dict[str, Any]]:
+    """Pick the best tiling for one shape and persist it.
+
+    measure: optional `cfg -> seconds` wall-clock callable; when absent the
+    analytic `predict_us` model scores candidates (the only option without
+    an accelerator).
+    """
+    backend = backend or _backend()
+    cache = cache or get_cache()
+    key = shape_key(kind, n, m, c, k, v, dtype, backend)
+
+    best_cfg, best_t, measured = None, math.inf, measure is not None
+    for cand in enumerate_candidates(kind, n, m, c, k, v):
+        if measure is not None:
+            t_us = measure(cand) * 1e6
+        else:
+            t_us = predict_us(kind, n, m, c, k, v,
+                              cand.block_n, cand.block_m, cand.block_c,
+                              version=version)
+        if t_us < best_t:
+            best_cfg, best_t = cand, t_us
+
+    assert best_cfg is not None
+    record = {
+        **best_cfg.as_dict(),
+        "predicted_us": best_t,
+        "measured": measured,
+        "source": "wallclock" if measured else "roofline_model",
+    }
+    cache.put(key, record)
+    if save:
+        cache.save()
+    return best_cfg, record

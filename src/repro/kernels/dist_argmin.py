@@ -5,7 +5,8 @@ several table reads — e.g. MoE layers encode each token once and every
 expert's table consumes the same indices (DESIGN.md §4).
 
 The codebook tile is centroid-stationary in VMEM (index_map ignores the N
-grid axis), mirroring the paper's cache-resident codebook loop.
+grid axis), mirroring the paper's cache-resident codebook loop. Block sizes
+default to the shape-keyed autotuner (repro.kernels.autotune, DESIGN.md §3).
 """
 
 from __future__ import annotations
@@ -15,6 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
 
 
 def _encode_kernel(x_ref, p_ref, o_ref):
@@ -30,24 +33,11 @@ def _encode_kernel(x_ref, p_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_c", "interpret"))
-def encode_pallas(
-    x: jax.Array,          # (N, D)
-    centroids: jax.Array,  # (C, K, V)
-    *,
-    block_n: int = 512,
-    block_c: int | None = None,
-    interpret: bool = False,
-) -> jax.Array:            # (N, C) int32
-    n, d = x.shape
-    c, k, v = centroids.shape
-    bn = min(block_n, n)
-    bc = block_c if block_c is not None else max(1, min(c, 2048 // v))
-    while c % bc:
-        bc -= 1
-    pad_n = (-n) % bn
-    xp = jnp.pad(x, ((0, pad_n), (0, 0))) if pad_n else x
-    np_ = n + pad_n
-    out = pl.pallas_call(
+def _encode_call(x_sub, centroids, *, block_n, block_c, interpret):
+    np_, c, v = x_sub.shape
+    k = centroids.shape[1]
+    bn, bc = block_n, block_c
+    return pl.pallas_call(
         _encode_kernel,
         grid=(np_ // bn, c // bc),
         in_specs=[
@@ -57,5 +47,27 @@ def encode_pallas(
         out_specs=pl.BlockSpec((bn, bc), lambda i, cc: (i, cc)),
         out_shape=jax.ShapeDtypeStruct((np_, c), jnp.int32),
         interpret=interpret,
-    )(xp.reshape(np_, c, v), centroids.astype(jnp.float32))
+    )(x_sub, centroids.astype(jnp.float32))
+
+
+def encode_pallas(
+    x: jax.Array,          # (N, D)
+    centroids: jax.Array,  # (C, K, V)
+    *,
+    block_n: int | None = None,
+    block_c: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:            # (N, C) int32
+    n, d = x.shape
+    c, k, v = centroids.shape
+    bn, _, bc = autotune.resolve_blocks(
+        "encode", n, 0, c, k, v, str(x.dtype), block_n, 0, block_c
+    )
+    pad_n = (-n) % bn
+    xp = jnp.pad(x, ((0, pad_n), (0, 0))) if pad_n else x
+    np_ = n + pad_n
+    out = _encode_call(
+        xp.reshape(np_, c, v), centroids,
+        block_n=bn, block_c=bc, interpret=interpret,
+    )
     return out[:n]

@@ -1,6 +1,6 @@
-"""Fused LUT-AMM Pallas TPU kernel: encode + table read + accumulate.
+"""Fused LUT-AMM Pallas TPU kernel family: encode + table read + accumulate.
 
-TPU adaptation of the paper's section-5 inference design (see DESIGN.md §2):
+TPU adaptation of the paper's section-5 inference design (DESIGN.md §2):
 
   * closest-centroid search  -> MXU dot(a_blk, P^T) per codebook block, with
     the codebook block pinned in VMEM across the whole N sweep
@@ -8,20 +8,28 @@ TPU adaptation of the paper's section-5 inference design (see DESIGN.md §2):
     coordinate, so the pipeline emitter keeps the same tile resident).
   * argmin                   -> VPU lane reduction (no sequential RAW hazard)
   * shuffle-instruction read -> one-hot x table matmul on the MXU
-  * INT16/INT32 mixed accum  -> int8 table dequantized in-VMEM, fp32 MXU accum
+  * INT16/INT32 mixed accum  -> int8 one-hot x int8 table with int32
+    accumulation (v2, DESIGN.md §2.3)
 
-Grid = (N/bn, M/bm, C/bc) with the codebook axis innermost so the (bn, bm)
-output tile accumulates in place across codebook steps.
+Grid = (N/bn, M/bm, C/bc) with the codebook axis innermost.
 
-VMEM working set per step:
-  x tile     bn * bc * V * 4
-  P tile     bc * K * V * 4
-  T tile     bc * K * bm   (int8)
-  out tile   bn * bm * 4
-Defaults (bn=256, bm=512, bc*V<=2048, K=16) stay under ~4 MB, leaving room
-for double buffering in 16 MB of VMEM. bn is a multiple of 8 (f32 sublane),
-bm a multiple of 128 (lane width), K=16 packs two one-hot groups per MXU
-128-lane contraction slice.
+Two generations are kept side by side for benchmarking:
+
+  `lut_amm_pallas` (v2, default) — int8-native: the table tile enters the MXU
+  as int8 (`preferred_element_type=jnp.int32`), partial sums accumulate in a
+  VMEM scratch buffer across codebook steps, and the output tile is written
+  exactly once on the final step through a fused dequantize + bias +
+  activation epilogue. With the m-shared (1,1,M) scale layout the whole tile
+  is dequantized exactly once; per-codebook scale layouts rescale the int32
+  partials per step into an fp32 scratch but still never materialize an fp32
+  table (DESIGN.md §2.3).
+
+  `lut_amm_pallas_v1` — the original kernel: dequantizes the int8 table to
+  fp32 in VMEM on every codebook step, contracts in fp32 and read-modify-
+  writes the output tile across the innermost grid axis.
+
+Block sizes default to the shape-keyed autotuner (repro.kernels.autotune);
+the VMEM budget model for legal tilings is documented in DESIGN.md §3.1.
 """
 
 from __future__ import annotations
@@ -31,14 +39,32 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import autotune
+
+ACTIVATIONS = ("none", "relu", "silu", "gelu", "relu2")
 
 
-def _lut_amm_kernel(x_ref, p_ref, t_ref, s_ref, o_ref, *, n_c_blocks: int):
-    c_step = pl.program_id(2)
+def _apply_act(acc: jax.Array, act: str) -> jax.Array:
+    if act == "none":
+        return acc
+    if act == "relu":
+        return jnp.maximum(acc, 0.0)
+    if act == "silu":
+        return jax.nn.silu(acc)
+    if act == "gelu":
+        return jax.nn.gelu(acc)
+    if act == "relu2":
+        r = jnp.maximum(acc, 0.0)
+        return r * r
+    raise ValueError(f"unknown epilogue activation {act!r}")
 
+
+def _encode_onehot_i8(x_ref, p_ref) -> jax.Array:
+    """Distance + argmin + int8 one-hot for one (bn, bc) tile -> (bc, bn, K)."""
     a = x_ref[...].astype(jnp.float32)          # (bn, bc, V)
     p = p_ref[...].astype(jnp.float32)          # (bc, K, V)
-
     # squared distances: batch over codebooks on the MXU
     # (bc, bn, K) <- (bn, bc, V) x (bc, K, V)
     cross = jax.lax.dot_general(
@@ -49,14 +75,185 @@ def _lut_amm_kernel(x_ref, p_ref, t_ref, s_ref, o_ref, *, n_c_blocks: int):
     a_nrm = jnp.sum(a * a, axis=-1).T[:, :, None]        # (bc, bn, 1)
     p_nrm = jnp.sum(p * p, axis=-1)[:, None, :]          # (bc, 1, K)
     dists = a_nrm - 2.0 * cross + p_nrm                  # (bc, bn, K)
-
-    # vectorized argmin over the K lane axis, then one-hot re-expansion
+    # vectorized argmin over the K lane axis, then one-hot re-expansion —
+    # int8 so the table read below runs on the int8 MXU path.
     idx = jnp.argmin(dists, axis=-1)                     # (bc, bn)
-    k = dists.shape[-1]
     lanes = jax.lax.broadcasted_iota(jnp.int32, dists.shape, 2)
-    onehot = (lanes == idx[:, :, None]).astype(jnp.float32)   # (bc, bn, K)
+    return (lanes == idx[:, :, None]).astype(jnp.int8)   # (bc, bn, K)
 
-    # dequantized table read as a one-hot MXU contraction
+
+# ---------------------------------------------------------------------------
+# v2 kernel (int8-native, scratch accumulation, fused epilogue)
+# ---------------------------------------------------------------------------
+
+def _lut_amm_kernel_v2(
+    *refs,
+    n_c_blocks: int,
+    shared_scale: bool,
+    has_bias: bool,
+    act: str,
+):
+    if has_bias:
+        x_ref, p_ref, t_ref, s_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, p_ref, t_ref, s_ref, o_ref, acc_ref = refs
+        b_ref = None
+    c_step = pl.program_id(2)
+
+    onehot = _encode_onehot_i8(x_ref, p_ref)             # (bc, bn, K) int8
+
+    # int8 x int8 -> int32 table read on the MXU; the table tile never
+    # leaves int8 (v1 materialized an fp32 copy here every step).
+    # (bc, bn, bm) <- (bc, bn, K) x (bc, K, bm)
+    part = jax.lax.dot_general(
+        onehot, t_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )
+
+    if shared_scale:
+        # (1,1,M) scales factor out of the codebook sum: accumulate raw
+        # int32 counts, dequantize ONCE per output tile in the epilogue.
+        contrib = jnp.sum(part, axis=0)                  # (bn, bm) int32
+    else:
+        # per-codebook scales: rescale the int32 partials of this step, but
+        # the accumulator stays in scratch and o_ref is still written once.
+        s = s_ref[...].astype(jnp.float32)               # (bc, 1, 1|bm)
+        contrib = jnp.sum(part.astype(jnp.float32) * s, axis=0)
+
+    @pl.when(c_step == 0)
+    def _init():
+        acc_ref[...] = contrib
+
+    @pl.when(c_step != 0)
+    def _accum():
+        acc_ref[...] += contrib
+
+    @pl.when(c_step == n_c_blocks - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if shared_scale:
+            # the single dequantize of this output tile
+            acc = acc.astype(jnp.float32) * s_ref[...].reshape(1, -1)
+        if has_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _apply_act(acc, act)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block_n", "block_m", "block_c", "act", "interpret",
+    ),
+)
+def _lut_amm_call_v2(
+    x_sub, centroids, table_q, scale, bias,
+    *, block_n, block_m, block_c, act, interpret,
+):
+    np_, c, v = x_sub.shape
+    k = centroids.shape[1]
+    mp_ = table_q.shape[-1]
+    bn, bm, bc = block_n, block_m, block_c
+    grid = (np_ // bn, mp_ // bm, c // bc)
+    shared_scale = scale.shape[0] == 1
+    s_m = 1 if scale.shape[-1] == 1 else bm
+
+    if shared_scale:
+        s_spec = pl.BlockSpec(
+            (1, 1, s_m),
+            (lambda i, j, cc: (0, 0, j)) if s_m != 1 else (lambda i, j, cc: (0, 0, 0)),
+        )
+    else:
+        s_spec = pl.BlockSpec(
+            (bc, 1, s_m),
+            (lambda i, j, cc: (cc, 0, j)) if s_m != 1 else (lambda i, j, cc: (cc, 0, 0)),
+        )
+    in_specs = [
+        pl.BlockSpec((bn, bc, v), lambda i, j, cc: (i, cc, 0)),
+        pl.BlockSpec((bc, k, v), lambda i, j, cc: (cc, 0, 0)),
+        pl.BlockSpec((bc, k, bm), lambda i, j, cc: (cc, 0, j)),
+        s_spec,
+    ]
+    operands = [x_sub, centroids.astype(jnp.float32), table_q, scale]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bm), lambda i, j, cc: (0, j)))
+        operands.append(bias.reshape(1, -1))
+
+    acc_dtype = jnp.int32 if shared_scale else jnp.float32
+    return pl.pallas_call(
+        functools.partial(
+            _lut_amm_kernel_v2,
+            n_c_blocks=grid[2],
+            shared_scale=shared_scale,
+            has_bias=bias is not None,
+            act=act,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, cc: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bm), acc_dtype)],
+        interpret=interpret,
+    )(*operands)
+
+
+def lut_amm_pallas(
+    x: jax.Array,          # (N, D)
+    centroids: jax.Array,  # (C, K, V) fp32
+    table_q: jax.Array,    # (C, K, M) int8
+    scale: jax.Array,      # (C|1, 1, 1) or (C|1, 1, M) fp32
+    *,
+    bias: jax.Array | None = None,   # (M,) fused into the epilogue
+    act: str = "none",               # fused epilogue activation
+    block_n: int | None = None,
+    block_m: int | None = None,
+    block_c: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """v2 fused LUT-AMM: (N, D) -> (N, M). See module docstring."""
+    n, d = x.shape
+    c, k, v = centroids.shape
+    m = table_q.shape[-1]
+    if d != c * v:
+        raise ValueError(f"D={d} != C*V={c}*{v}")
+    if act not in ACTIVATIONS:
+        raise ValueError(f"act={act!r} not in {ACTIVATIONS}")
+
+    bn, bm, bc = autotune.resolve_blocks(
+        "lut_amm", n, m, c, k, v, str(x.dtype), block_n, block_m, block_c
+    )
+
+    # pad N / M to block multiples (table M padding is cheap: int8 zeros)
+    pad_n, pad_m = (-n) % bn, (-m) % bm
+    xp = jnp.pad(x, ((0, pad_n), (0, 0))) if pad_n else x
+    tp = jnp.pad(table_q, ((0, 0), (0, 0), (0, pad_m))) if pad_m else table_q
+    sp = (
+        jnp.pad(scale, ((0, 0), (0, 0), (0, pad_m)))
+        if (pad_m and scale.shape[-1] != 1)
+        else scale
+    )
+    bp = None
+    if bias is not None:
+        bp = jnp.pad(bias, (0, pad_m)) if pad_m else bias
+    np_ = n + pad_n
+
+    out = _lut_amm_call_v2(
+        xp.reshape(np_, c, v), centroids, tp, sp, bp,
+        block_n=bn, block_m=bm, block_c=bc, act=act, interpret=interpret,
+    )
+    return out[:n, :m].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# v1 kernel (kept for dense-vs-v1-vs-v2 benchmarking)
+# ---------------------------------------------------------------------------
+
+def _lut_amm_kernel_v1(x_ref, p_ref, t_ref, s_ref, o_ref):
+    c_step = pl.program_id(2)
+
+    onehot = _encode_onehot_i8(x_ref, p_ref).astype(jnp.float32)
+
+    # fp32 dequantized table materialized EVERY codebook step (v2 fixes this)
     table = t_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
     # (bc, bn, bm) <- (bc, bn, K) x (bc, K, bm)
     part = jax.lax.dot_general(
@@ -79,7 +276,7 @@ def _lut_amm_kernel(x_ref, p_ref, t_ref, s_ref, o_ref, *, n_c_blocks: int):
     jax.jit,
     static_argnames=("block_n", "block_m", "block_c", "interpret"),
 )
-def lut_amm_pallas(
+def lut_amm_pallas_v1(
     x: jax.Array,          # (N, D)
     centroids: jax.Array,  # (C, K, V) fp32
     table_q: jax.Array,    # (C, K, M) int8
@@ -102,7 +299,6 @@ def lut_amm_pallas(
     while c % bc:
         bc -= 1
 
-    # pad N / M to block multiples (table M padding is cheap: int8 zeros)
     pad_n, pad_m = (-n) % bn, (-m) % bm
     xp = jnp.pad(x, ((0, pad_n), (0, 0))) if pad_n else x
     tp = jnp.pad(table_q, ((0, 0), (0, 0), (0, pad_m))) if pad_m else table_q
@@ -118,7 +314,7 @@ def lut_amm_pallas(
     s_m = 1 if scale.shape[-1] == 1 else bm
 
     out = pl.pallas_call(
-        functools.partial(_lut_amm_kernel, n_c_blocks=grid[2]),
+        _lut_amm_kernel_v1,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn, bc, v), lambda i, j, cc: (i, cc, 0)),
@@ -128,7 +324,7 @@ def lut_amm_pallas(
                 (bc, 1, s_m),
                 (lambda i, j, cc: (cc, 0, j)) if s_m != 1 else (lambda i, j, cc: (cc, 0, 0)),
             ),
-            ],
+        ],
         out_specs=pl.BlockSpec((bn, bm), lambda i, j, cc: (i, j)),
         out_shape=jax.ShapeDtypeStruct((np_, mp_), jnp.float32),
         interpret=interpret,

@@ -4,13 +4,19 @@
 interpret mode elsewhere (this container is CPU-only: interpret=True executes
 the kernel body in Python for correctness validation; the XLA one-hot path in
 repro.core.pq is the production fallback used by the distributed dry-run).
+
+The default entry points are the v2 kernels (int8-native MXU table read,
+VMEM scratch accumulation, fused bias/activation epilogue — DESIGN.md §2.3)
+with autotuned block sizes (DESIGN.md §3). `lut_amm_v1` keeps the original
+kernel callable for side-by-side benchmarking.
 """
 
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.lut_amm import lut_amm_pallas
+from repro.kernels.dist_argmin import encode_pallas
+from repro.kernels.lut_amm import lut_amm_pallas, lut_amm_pallas_v1
 from repro.kernels.ref import encode_ref, lut_amm_ref
 
 
@@ -24,15 +30,45 @@ def lut_amm(
     table_q: jax.Array,
     scale: jax.Array,
     *,
+    bias: jax.Array | None = None,
+    act: str = "none",
+    block_n: int | None = None,
+    block_m: int | None = None,
+    block_c: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused LUT-NN approximate matmul (v2): (N, D) -> (N, M)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return lut_amm_pallas(
+        x,
+        centroids,
+        table_q,
+        scale,
+        bias=bias,
+        act=act,
+        block_n=block_n,
+        block_m=block_m,
+        block_c=block_c,
+        interpret=interpret,
+    )
+
+
+def lut_amm_v1(
+    x: jax.Array,
+    centroids: jax.Array,
+    table_q: jax.Array,
+    scale: jax.Array,
+    *,
     block_n: int = 256,
     block_m: int = 512,
     block_c: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused LUT-NN approximate matmul: (N, D) -> (N, M)."""
+    """Original fused kernel (fp32 dequant per step + o_ref accumulation)."""
     if interpret is None:
         interpret = not _on_tpu()
-    return lut_amm_pallas(
+    return lut_amm_pallas_v1(
         x,
         centroids,
         table_q,
@@ -44,4 +80,20 @@ def lut_amm(
     )
 
 
-__all__ = ["lut_amm", "lut_amm_ref", "encode_ref"]
+def encode(
+    x: jax.Array,
+    centroids: jax.Array,
+    *,
+    block_n: int | None = None,
+    block_c: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Closest-centroid encode: (N, D) -> int32 (N, C)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return encode_pallas(
+        x, centroids, block_n=block_n, block_c=block_c, interpret=interpret
+    )
+
+
+__all__ = ["lut_amm", "lut_amm_v1", "encode", "lut_amm_ref", "encode_ref"]

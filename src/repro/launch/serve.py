@@ -24,9 +24,12 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="run LUT sites through the fused Pallas v2 kernel "
+                         "(autotuner-warmed; interpret mode off-TPU)")
     args = ap.parse_args()
 
-    arch = reduce_arch(get_arch(args.arch))
+    arch = reduce_arch(get_arch(args.arch), lut_use_kernel=args.use_kernel)
     bundle = build_model(arch, Mode.LUT_INFER)
     params = bundle.init(jax.random.PRNGKey(0))
     eng = ServingEngine(
@@ -44,8 +47,10 @@ def main() -> None:
     done = eng.run_until_done()
     dt = time.time() - t0
     total_tok = sum(len(r.out_tokens) for r in done)
+    mode = "pallas-v2 kernel" if args.use_kernel else "XLA one-hot"
     print(f"{len(done)} requests, {total_tok} tokens in {dt:.1f}s "
-          f"({total_tok/dt:.1f} tok/s, {args.slots} slots, LUT INT8 tables)")
+          f"({total_tok/dt:.1f} tok/s, {args.slots} slots, LUT INT8 tables, "
+          f"{mode}, {eng.n_lut_shapes_tuned} LUT shapes autotuned)")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
 

@@ -9,19 +9,90 @@ slots (EOS or max_tokens) are freed and refilled from the queue.
 The jitted prefill/decode steps are the same `forward_step` the multi-pod
 dry-run lowers — the engine is pure host-side orchestration, so it works
 identically on 1 CPU device and a 512-chip mesh.
+
+When the bundle's LUT sites run the fused Pallas kernel
+(`LUTConfig.use_kernel`), the engine warms the block-size autotuner at
+construction for the decode token count (N = n_slots) and a geometric
+ladder of prefill chunk multiples up to max_seq, so the steady-state decode
+loop and common prefill lengths hit tuned shapes; anything uncovered falls
+back to the heuristic tiling (DESIGN.md §3.3).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any
+from typing import Any, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelBundle
+
+
+def iter_lut_kernel_sites(cfg: Any, _seen: set[int] | None = None) -> Iterator[Any]:
+    """Yield every LUT_INFER linear-site config under `cfg` that runs the
+    fused kernel.
+
+    Walks the nested dataclass/tuple config tree duck-typed (a site has
+    d_in/d_out/mode/lut attributes) so this stays import-cycle-free with the
+    model zoo.
+    """
+    if _seen is None:
+        _seen = set()
+    if cfg is None or id(cfg) in _seen:
+        return
+    _seen.add(id(cfg))
+    if all(hasattr(cfg, a) for a in ("d_in", "d_out", "mode", "lut")):
+        if getattr(cfg.mode, "value", cfg.mode) == "lut_infer" and cfg.lut.use_kernel:
+            yield cfg
+        return
+    if dataclasses.is_dataclass(cfg) and not isinstance(cfg, type):
+        children: Iterator[Any] = (
+            getattr(cfg, f.name) for f in dataclasses.fields(cfg)
+        )
+    elif isinstance(cfg, (tuple, list)):
+        children = iter(cfg)
+    else:
+        return
+    for child in children:
+        yield from iter_lut_kernel_sites(child, _seen)
+
+
+def warm_lut_autotune(
+    bundle: ModelBundle, token_counts: list[int], dtype: str = "float32"
+) -> int:
+    """Pre-tune kernel block sizes for every (LUT site x token count) pair.
+
+    `dtype` must be the dtype the LUT sites will actually see at runtime
+    (the engine's compute dtype) — the kernel keys its cache lookups on
+    `str(x.dtype)`, so a mismatched dtype warms keys nobody reads.
+
+    Uses the analytic roofline model off-accelerator (fast: pure python),
+    real wall-clock on TPU is wired by the benchmarks. Returns the number of
+    (site, N) shapes tuned; winners persist in the autotune JSON cache.
+    """
+    from repro.kernels import autotune
+
+    tuned = set()
+    for site in iter_lut_kernel_sites(bundle.cfg):
+        lut = site.lut
+        c = site.d_in // lut.v
+        for n in token_counts:
+            key = ("lut_amm", n, site.d_out, c, lut.k, lut.v)
+            if key in tuned:
+                continue
+            autotune.tune(*key, dtype=dtype, save=False)
+            tuned.add(key)
+    if tuned:
+        try:
+            autotune.get_cache().save()
+        except OSError:
+            # persistence is an optimization — winners stay in the
+            # in-process cache; never fail serving over a cache file.
+            pass
+    return len(tuned)
 
 
 @dataclasses.dataclass
@@ -44,12 +115,33 @@ class ServingEngine:
         max_seq: int = 256,
         prefill_chunk: int = 32,
         compute_dtype=jnp.float32,
+        autotune_lut: bool = True,
     ):
         self.bundle = bundle
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        # decode hot path: every step is an (n_slots, 1)-token forward, so
+        # the LUT kernels see N = n_slots. Prefill pads prompts up to a
+        # multiple of prefill_chunk (see _do_prefill), so warm a geometric
+        # ladder of chunk multiples up to max_seq (bounded work even for
+        # long contexts); uncovered lengths fall back to the heuristic
+        # tiling — a perf miss, never a correctness issue.
+        if autotune_lut:
+            n_chunks = max(1, -(-max_seq // prefill_chunk))
+            mults: list[int] = []
+            i = 1
+            while i < n_chunks:
+                mults.append(i)
+                i *= 2
+            mults.append(n_chunks)
+            counts = [n_slots] + [n_slots * prefill_chunk * i for i in mults]
+            self.n_lut_shapes_tuned = warm_lut_autotune(
+                bundle, counts, dtype=jnp.dtype(compute_dtype).name
+            )
+        else:
+            self.n_lut_shapes_tuned = 0
         self.caches = bundle.init_caches(n_slots, max_seq, dtype=compute_dtype)
         self.cache_len = np.zeros((n_slots,), np.int32)
         self.slots: list[Request | None] = [None] * n_slots

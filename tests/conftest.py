@@ -9,3 +9,10 @@ import pytest
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolate_autotune_cache(tmp_path, monkeypatch):
+    """Point the kernel block autotuner at a per-test cache file so tests
+    never read or pollute the user-level ~/.cache/repro/autotune.json."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))

@@ -1,0 +1,117 @@
+"""Shape-keyed block autotuner: budget model, cost model, cache round-trip,
+and the serving-engine warmup wiring (DESIGN.md §3)."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+
+
+def test_candidates_respect_vmem_budget():
+    cands = list(autotune.enumerate_candidates("lut_amm", 4096, 14336, 128, 16, 32))
+    assert cands, "must always yield at least one tiling"
+    for c in cands:
+        assert autotune.vmem_bytes(c.block_n, c.block_m, c.block_c, 16, 32) \
+            <= autotune.VMEM_BUDGET
+        assert 128 % c.block_c == 0
+
+
+def test_predict_v2_never_slower_than_v1():
+    """The analytic model must encode v2's advantage: no per-step dequant
+    pass, doubled int8 MXU rate."""
+    for (n, m, c, k, v) in [(256, 4096, 128, 16, 32), (8, 512, 16, 16, 8)]:
+        for cand in autotune.enumerate_candidates("lut_amm", n, m, c, k, v):
+            t1 = autotune.predict_us("lut_amm", n, m, c, k, v,
+                                     cand.block_n, cand.block_m, cand.block_c,
+                                     version=1)
+            t2 = autotune.predict_us("lut_amm", n, m, c, k, v,
+                                     cand.block_n, cand.block_m, cand.block_c,
+                                     version=2)
+            assert t2 <= t1
+
+
+def test_lookup_heuristic_on_cache_miss(tmp_path):
+    cache = autotune.AutotuneCache(tmp_path / "c.json")
+    cfg = autotune.lookup("lut_amm", 100, 300, 8, 16, 8, cache=cache)
+    assert cfg == autotune.heuristic("lut_amm", 100, 300, 8, 16, 8)
+
+
+def test_tune_cache_roundtrip(tmp_path):
+    """tune() persists the winner; a fresh cache object loads it back and
+    lookup() serves it instead of the heuristic."""
+    path = tmp_path / "cache.json"
+    cache = autotune.AutotuneCache(path)
+    shape = ("lut_amm", 64, 256, 16, 16, 8)
+    best, rec = autotune.tune(*shape, dtype="float32", backend="cpu", cache=cache)
+    assert path.exists()
+    assert rec["source"] == "roofline_model" and not rec["measured"]
+
+    fresh = autotune.AutotuneCache(path)
+    got = autotune.lookup(*shape, dtype="float32", backend="cpu", cache=fresh)
+    assert got == best
+
+    # raw JSON sanity: versioned schema with the documented key format
+    raw = json.loads(path.read_text())
+    assert raw["version"] == 1
+    key = autotune.shape_key("lut_amm", 64, 256, 16, 16, 8, "float32", "cpu")
+    assert set(raw["entries"]) == {key}
+    assert raw["entries"][key]["block_n"] == best.block_n
+
+
+def test_tune_picks_measured_winner(tmp_path):
+    """With a measure callable the tuner minimizes wall-clock, not the model."""
+    cache = autotune.AutotuneCache(tmp_path / "m.json")
+    target = autotune.BlockConfig(16, 128, 2)
+
+    def measure(cfg):
+        return 1e-6 if cfg == target else 1e-3
+
+    best, rec = autotune.tune("lut_amm", 64, 256, 4, 16, 8,
+                              cache=cache, measure=measure)
+    assert best == target and rec["measured"] and rec["source"] == "wallclock"
+
+
+def test_corrupt_cache_degrades_gracefully(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text("{not json")
+    cache = autotune.AutotuneCache(path)
+    assert cache.get("anything") is None
+    cfg = autotune.lookup("encode", 32, 0, 4, 16, 8, cache=cache)
+    assert cfg == autotune.heuristic("encode", 32, 0, 4, 16, 8)
+
+
+def test_engine_warmup_populates_cache(key, tmp_path, monkeypatch):
+    """ServingEngine with a use_kernel bundle pre-tunes the decode/prefill
+    LUT shapes into the autotune cache (DESIGN.md §3.3)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "warm.json"))
+    from repro.configs import build_model, get_arch, reduce_arch
+    from repro.core.amm import Mode
+    from repro.serving.engine import ServingEngine, iter_lut_kernel_sites
+
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, lut_use_kernel=True)
+    bundle = build_model(arch, Mode.LUT_INFER)
+    assert len(list(iter_lut_kernel_sites(bundle.cfg))) > 0
+
+    params = bundle.init(key)
+    eng = ServingEngine(bundle, params, n_slots=2, max_seq=32, prefill_chunk=8)
+    assert eng.n_lut_shapes_tuned > 0
+    raw = json.loads((tmp_path / "warm.json").read_text())
+    assert len(raw["entries"]) == eng.n_lut_shapes_tuned
+    # decode shape (N = n_slots) is among the tuned keys
+    assert any("|n=2|" in k for k in raw["entries"])
+
+    # and the engine still serves correctly through the kernel path
+    eng.submit([1, 2, 3], max_tokens=3)
+    done = eng.run_until_done()
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+    assert all(np.isfinite(t) for t in done[0].out_tokens)
+
+
+def test_blockconfig_is_hashable_frozen():
+    cfg = autotune.BlockConfig(8, 128, 1)
+    assert hash(cfg) == hash(autotune.BlockConfig(8, 128, 1))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.block_n = 16

@@ -1,8 +1,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-import hypothesis.strategies as st
 
 from repro.core import kmeans, pq
 

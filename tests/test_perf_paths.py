@@ -91,3 +91,20 @@ def test_moe_group_tokens_invariance(key):
     l4, _, _ = tf.lm_apply(m4.cfg, params, tokens=toks, pos=pos, compute_dtype=jnp.float32)
     # same experts chosen per token (capacity generous at this size)
     np.testing.assert_allclose(np.asarray(l8), np.asarray(l4), rtol=2e-3, atol=2e-3)
+
+
+def test_use_kernel_model_level_matches_xla_path(key):
+    """Whole-model LUT_INFER forward through the fused Pallas v2 kernel
+    (interpret mode off-TPU) == the pure-XLA one-hot path, same params.
+    Exercises the fused bias epilogue wiring in repro.core.amm."""
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, use_bias=True)
+    m_xla = build_model(arch, Mode.LUT_INFER)
+    m_krn = build_model(dataclasses.replace(arch, lut_use_kernel=True), Mode.LUT_INFER)
+    params = m_krn.init(key)   # (1,1,M)-scale layout works on both paths
+    B, S = 2, 8
+    toks = jax.random.randint(key, (B, S), 0, arch.vocab)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    lg_k, _, _ = tf.lm_apply(m_krn.cfg, params, tokens=toks, pos=pos, compute_dtype=jnp.float32)
+    lg_x, _, _ = tf.lm_apply(m_xla.cfg, params, tokens=toks, pos=pos, compute_dtype=jnp.float32)
+    assert np.isfinite(np.asarray(lg_k)).all()
+    np.testing.assert_allclose(np.asarray(lg_k), np.asarray(lg_x), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,59 @@
+"""Hypothesis property tests for the PQ core — split from test_pq.py so the
+unit suite survives environments without hypothesis installed."""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given  # noqa: E402
+
+from repro.core import pq  # noqa: E402
+
+hypothesis.settings.register_profile(
+    "fast", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("fast")
+
+
+@given(
+    n=st.integers(2, 12),
+    c=st.integers(1, 4),
+    k=st.integers(2, 8),
+    v=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_property_reconstruction_error_le_worst_centroid(n, c, k, v, seed):
+    """PQ reconstruction picks the NEAREST centroid: its distance is <= the
+    distance to any other centroid, per codebook (Lloyd optimality of the
+    encoding step, Eq. 2)."""
+    kk = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(kk)
+    x = jax.random.normal(k1, (n, c * v))
+    P = jax.random.normal(k2, (c, k, v))
+    d = pq.pairwise_sq_dists(pq.split_subvectors(x, v), P)
+    chosen = jnp.min(d, -1)
+    assert bool(jnp.all(chosen[..., None] <= d + 1e-6))
+
+
+@given(
+    n=st.integers(2, 10),
+    k=st.integers(2, 6),
+    v=st.integers(1, 4),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_property_amm_linear_in_weight(n, k, v, m, seed):
+    """h^c (Eq. 3) and the AMM output are linear in W: AMM(x; aW) = a*AMM."""
+    kk = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(kk, 3)
+    x = jax.random.normal(k1, (n, 2 * v))
+    P = jax.random.normal(k2, (2, k, v))
+    W = jax.random.normal(k3, (2 * v, m))
+    enc = pq.hard_encode(pq.pairwise_sq_dists(pq.split_subvectors(x, v), P))
+    o1 = pq.lut_contract(enc, pq.build_table(P, 3.0 * W, stop_weight_grad=False))
+    o2 = 3.0 * pq.lut_contract(enc, pq.build_table(P, W, stop_weight_grad=False))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-4, atol=1e-4)

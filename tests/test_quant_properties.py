@@ -1,0 +1,26 @@
+"""Hypothesis property tests for table quantization — split from
+test_quant.py so the unit suite survives environments without hypothesis."""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given  # noqa: E402
+
+from repro.core import quant  # noqa: E402
+
+hypothesis.settings.register_profile(
+    "fast", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("fast")
+
+
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 1000))
+def test_property_quant_idempotent(bits, seed):
+    T = jax.random.normal(jax.random.PRNGKey(seed), (2, 4, 4))
+    once = quant.fake_quant(T, bits=bits)
+    twice = quant.fake_quant(once, bits=bits)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), rtol=1e-4, atol=1e-5)
