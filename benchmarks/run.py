@@ -5,6 +5,8 @@
   PYTHONPATH=src python -m benchmarks.run --json op_microbench
       # also write per-op microbench rows to BENCH_kernels.json so future
       # PRs have a kernel-perf trajectory to regress against
+  PYTHONPATH=src python -m benchmarks.run --json serving_bench
+      # likewise BENCH_serving.json: decode/prefill tok/s + occupancy
 
 Each module prints its table as CSV plus `name,us_per_call,derived` at the
 end. The dry-run roofline tables (EXPERIMENTS.md sections Dry-run/Roofline)
@@ -27,10 +29,16 @@ MODULES = [
     "fig13_replaced_layers",
     "quant_ablation",
     "op_microbench",
+    "serving_bench",
     "roofline_table",
 ]
 
-BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+# modules that emit a perf-trajectory JSON artifact under --json
+JSON_ARTIFACTS = {
+    "op_microbench": _ROOT / "BENCH_kernels.json",
+    "serving_bench": _ROOT / "BENCH_serving.json",
+}
 
 
 def main() -> None:
@@ -45,8 +53,8 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            if json_mode and name == "op_microbench":
-                mod.main(json_path=BENCH_JSON)
+            if json_mode and name in JSON_ARTIFACTS:
+                mod.main(json_path=JSON_ARTIFACTS[name])
             else:
                 mod.main()
         except Exception as e:  # noqa: BLE001 — keep the suite running

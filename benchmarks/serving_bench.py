@@ -1,0 +1,104 @@
+"""Serving-engine throughput: decode tok/s, prefill tok/s, and batch
+occupancy at two request loads (under-subscribed and over-subscribed slot
+pool), through the LUT_INFER int8-table model.
+
+A warm-up request compiles the engine's two token shapes off the clock, so
+the rows measure steady-state scheduler throughput, not jit. With
+`json_path` set (benchmarks/run.py --json) the rows are written to
+BENCH_serving.json so serving perf joins the BENCH_kernels.json trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+from repro.serving.engine import ServingEngine
+
+N_SLOTS = 4
+MAX_SEQ = 64
+PREFILL_CHUNK = 8
+MAX_TOKENS = 8
+# loads: half the slot pool (occupancy-starved) vs 3x the pool (saturated,
+# requests queue behind busy slots)
+LOADS = [("light_2req", 2), ("heavy_12req", 12)]
+
+
+def _run_load(bundle, params, n_requests: int) -> dict:
+    eng = ServingEngine(
+        bundle, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+        prefill_chunk=PREFILL_CHUNK, compute_dtype=jnp.float32,
+        autotune_lut=False,
+    )
+    # warm-up: compile the chunked-prefill and decode shapes off the clock
+    eng.submit(list(range(1, PREFILL_CHUNK + 2)), max_tokens=2)
+    eng.run_until_done()
+    eng.finished.clear()
+    eng.reset_stats()
+
+    key = jax.random.PRNGKey(2)
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        key, k = jax.random.split(key)
+        plen = int(jax.random.randint(k, (), 3, 2 * PREFILL_CHUNK))
+        eng.submit([(i * 7 + j) % 256 + 1 for j in range(plen)],
+                   max_tokens=MAX_TOKENS)
+    done = eng.run_until_done(max_steps=10_000)
+    wall_s = max(time.perf_counter() - t0, 1e-9)
+    assert len(done) == n_requests, (len(done), n_requests)
+
+    st = eng.stats()
+    return {
+        "requests": n_requests,
+        "n_slots": N_SLOTS,
+        "prefill_chunk": PREFILL_CHUNK,
+        "steps": st["steps"],
+        "prefill_tokens": st["prefill_tokens"],
+        "prefill_forwards": st["prefill_forwards"],
+        "prefill_tok_s": round(st["prefill_tok_s"], 1),
+        "decode_tokens": st["decode_tokens"],
+        "decode_forwards": st["decode_forwards"],
+        "decode_tok_s": round(st["decode_tok_s"], 1),
+        "decode_occupancy": round(st["decode_occupancy"], 3),
+        "shape_cache_hits": st["shape_cache_hits"],
+        "wall_s": round(wall_s, 3),
+    }
+
+
+def main(json_path: str | pathlib.Path | None = None) -> list[dict]:
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2)
+    bundle = build_model(arch, Mode.LUT_INFER)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    rows = []
+    cols = ["load", "requests", "decode_tok_s", "prefill_tok_s",
+            "decode_occupancy", "steps", "shape_cache_hits"]
+    print(",".join(cols))
+    for load, n in LOADS:
+        row = {"load": load, **_run_load(bundle, params, n)}
+        rows.append(row)
+        print(",".join(str(row[c]) for c in cols))
+
+    if json_path is not None:
+        payload = {
+            "schema": "serving_bench.v1",
+            "arch": "qwen3_1p7b(reduced,L=2)",
+            "mode": "lut_infer",
+            "backend": jax.default_backend(),
+            "rows": rows,
+        }
+        pathlib.Path(json_path).write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    _JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+    main(json_path=_JSON if "--json" in sys.argv else None)

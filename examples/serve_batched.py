@@ -1,5 +1,6 @@
 """Serving example: batched requests through the continuous-batching engine
-with int8 LUT tables (the paper's deployment mode).
+with int8 LUT tables (the paper's deployment mode), chunked prefill, and
+nucleus sampling.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -9,5 +10,9 @@ import sys
 from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
-    sys.argv = ["serve", "--arch", "qwen3_1p7b", "--requests", "8", "--slots", "4"]
+    sys.argv = [
+        "serve", "--arch", "qwen3_1p7b", "--requests", "8", "--slots", "4",
+        "--prefill-chunk", "8", "--temperature", "0.8", "--top-p", "0.95",
+        "--seed", "0",
+    ]
     serve_main()

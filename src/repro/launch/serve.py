@@ -2,6 +2,11 @@
 with a LUT_INFER (int8 table) model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1p7b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --temperature 0.8 --top-p 0.95
+
+A warm-up request runs (and is discarded) before the timed region so the
+reported tok/s measures steady state, not the one-off jit compile of the
+two engine shapes.
 """
 
 from __future__ import annotations
@@ -15,6 +20,7 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, build_model, get_arch, reduce_arch
 from repro.core.amm import Mode
 from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
 
 
 def main() -> None:
@@ -24,6 +30,15 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0, help="top-k filter; 0 disables")
+    ap.add_argument("--top-p", type=float, default=1.0, help="nucleus mass; 1 disables")
+    ap.add_argument("--seed", type=int, default=0, help="base sampling seed")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip the untimed warm-up request (tok/s then "
+                         "includes jit compile)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run LUT sites through the fused Pallas v2 kernel "
                          "(autotuner-warmed; interpret mode off-TPU)")
@@ -34,8 +49,21 @@ def main() -> None:
     params = bundle.init(jax.random.PRNGKey(0))
     eng = ServingEngine(
         bundle, params, n_slots=args.slots, max_seq=args.max_seq,
-        compute_dtype=jnp.float32,
+        prefill_chunk=args.prefill_chunk, compute_dtype=jnp.float32,
     )
+
+    if not args.no_warmup:
+        # compile both engine shapes (chunk prefill + decode) off the clock;
+        # use a >chunk prompt when the cache allows so the chunked path warms,
+        # and keep len <= max_seq-1 so max_tokens=2 survives the submit() cap
+        # (the warm-up must reach a decode forward)
+        wlen = (args.prefill_chunk + 1
+                if 2 * args.prefill_chunk <= args.max_seq
+                else min(args.prefill_chunk, args.max_seq - 1))
+        eng.submit(list(range(1, wlen + 1)), max_tokens=2)
+        eng.run_until_done()
+        eng.finished.clear()
+        eng.reset_stats()
 
     key = jax.random.PRNGKey(1)
     t0 = time.time()
@@ -43,14 +71,27 @@ def main() -> None:
         key, k = jax.random.split(key)
         plen = int(jax.random.randint(k, (), 4, 24))
         prompt = list(range(i + 1, i + 1 + plen))
-        eng.submit(prompt, max_tokens=args.max_tokens)
+        eng.submit(
+            prompt, max_tokens=args.max_tokens,
+            sampling=SamplingParams(
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, seed=args.seed + i,
+            ),
+        )
     done = eng.run_until_done()
-    dt = time.time() - t0
+    dt = max(time.time() - t0, 1e-9)
     total_tok = sum(len(r.out_tokens) for r in done)
     mode = "pallas-v2 kernel" if args.use_kernel else "XLA one-hot"
+    st = eng.stats()
     print(f"{len(done)} requests, {total_tok} tokens in {dt:.1f}s "
           f"({total_tok/dt:.1f} tok/s, {args.slots} slots, LUT INT8 tables, "
           f"{mode}, {eng.n_lut_shapes_tuned} LUT shapes autotuned)")
+    print(f"  steps={st['steps']} prefill: {st['prefill_tokens']} tok / "
+          f"{st['prefill_forwards']} fwd ({st['prefill_tok_s']:.1f} tok/s)  "
+          f"decode: {st['decode_tokens']} tok / {st['decode_forwards']} fwd "
+          f"({st['decode_tok_s']:.1f} tok/s)  "
+          f"occupancy={st['decode_occupancy']:.2f}  "
+          f"shape_cache_hits={st['shape_cache_hits']}")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
 

@@ -1,26 +1,42 @@
 """Slot-based continuous-batching serving engine.
 
 vLLM-style control plane scaled to this repo: a fixed pool of B slots backed
-by batched KV caches; requests are admitted into free slots, prefilled with
-a row-masked forward (other slots' caches untouched via a select-merge),
-then all active slots decode together one token per engine step. Finished
-slots (EOS or max_tokens) are freed and refilled from the queue.
+by batched KV caches. Scheduler state machine (DESIGN.md §6):
 
-The jitted prefill/decode steps are the same `forward_step` the multi-pod
-dry-run lowers — the engine is pure host-side orchestration, so it works
-identically on 1 CPU device and a 512-chip mesh.
+    queue --admit--> PREFILL --(prompt consumed)--> DECODE --(done)--> retired
 
-When the bundle's LUT sites run the fused Pallas kernel
-(`LUTConfig.use_kernel`), the engine warms the block-size autotuner at
-construction for the decode token count (N = n_slots) and a geometric
-ladder of prefill chunk multiples up to max_seq, so the steady-state decode
-loop and common prefill lengths hit tuned shapes; anything uncovered falls
-back to the heuristic tiling (DESIGN.md §3.3).
+* **Batched admission** — every free slot is filled from the queue at the
+  top of `step()`; all admitted (and still-prefilling) slots share ONE
+  padded `(n_slots, prefill_chunk)` prefill forward per step, row-masked so
+  untouched slots' caches never move (select-merge on per-slot `cache_len`).
+* **Chunked prefill** — prompts longer than `prefill_chunk` consume exactly
+  one fixed-size chunk per engine step, interleaved with the decode step of
+  already-active slots, so decode latency stays bounded by one chunk
+  forward. Every forward the engine ever issues therefore has one of
+  exactly two token shapes — `(n_slots, prefill_chunk)` and `(n_slots, 1)`
+  — which caps jit compile-cache growth at O(1) and lets the autotuner
+  warm-up match runtime LUT shapes exactly (N = n_slots·prefill_chunk and
+  N = n_slots).
+* **Sampling** — per-request temperature/top-k/top-p/greedy with a
+  deterministic per-request PRNG stream (repro.serving.sampling); the first
+  token is sampled from the final prefill chunk's logits and checked
+  against max_tokens/EOS immediately, so `max_tokens=1` returns exactly one
+  token.
+* **Observability** — `stats()` reports prefill/decode token and forward
+  counts, wall-clock split, mean decode batch occupancy, and token-shape
+  cache hits.
+
+The jitted step is the same `forward_step` the multi-pod dry-run lowers —
+the engine is pure host-side orchestration, so it works identically on
+1 CPU device and a 512-chip mesh. Limitation: padded prefill rows assume
+position-indexed caches (attention masks padding causally); SSM state is
+sequential, so mamba-family bundles need chunk-aligned prompts.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Iterator
 
@@ -29,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelBundle
+from repro.serving.sampling import GREEDY, SamplingParams, batch_arrays, sample_tokens
 
 
 def iter_lut_kernel_sites(cfg: Any, _seen: set[int] | None = None) -> Iterator[Any]:
@@ -101,8 +118,14 @@ class Request:
     prompt: list[int]
     max_tokens: int = 16
     eos_id: int | None = None
+    sampling: SamplingParams = GREEDY
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    n_prefilled: int = 0     # prompt tokens already consumed by chunk forwards
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.n_prefilled >= len(self.prompt)
 
 
 class ServingEngine:
@@ -117,28 +140,24 @@ class ServingEngine:
         compute_dtype=jnp.float32,
         autotune_lut: bool = True,
     ):
+        if not 1 <= prefill_chunk <= max_seq:
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} must be in [1, max_seq={max_seq}] "
+                f"— no prompt could ever be admitted"
+            )
         self.bundle = bundle
         self.params = params
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
-        # decode hot path: every step is an (n_slots, 1)-token forward, so
-        # the LUT kernels see N = n_slots. Prefill pads prompts up to a
-        # multiple of prefill_chunk (see _do_prefill), so warm a geometric
-        # ladder of chunk multiples up to max_seq (bounded work even for
-        # long contexts); uncovered lengths fall back to the heuristic
-        # tiling — a perf miss, never a correctness issue.
+        # the engine only ever issues two token shapes — (n_slots, 1) decode
+        # and (n_slots, prefill_chunk) chunked prefill — so the LUT warm-up
+        # is exactly those two N values, no ladder needed (DESIGN.md §3.3).
         if autotune_lut:
-            n_chunks = max(1, -(-max_seq // prefill_chunk))
-            mults: list[int] = []
-            i = 1
-            while i < n_chunks:
-                mults.append(i)
-                i *= 2
-            mults.append(n_chunks)
-            counts = [n_slots] + [n_slots * prefill_chunk * i for i in mults]
             self.n_lut_shapes_tuned = warm_lut_autotune(
-                bundle, counts, dtype=jnp.dtype(compute_dtype).name
+                bundle,
+                [n_slots, n_slots * prefill_chunk],
+                dtype=jnp.dtype(compute_dtype).name,
             )
         else:
             self.n_lut_shapes_tuned = 0
@@ -149,15 +168,16 @@ class ServingEngine:
         self.finished: list[Request] = []
         self._next_rid = 0
         self._compute_dtype = compute_dtype
+        self.reset_stats()
 
-        def prefill(params, tokens, cache_len, caches, slot_mask):
+        def step_fn(params, tokens, cache_len, caches, slot_mask):
             logits, new_caches = bundle.forward_step(
                 params,
                 {"tokens": tokens, "cache_len": cache_len},
                 caches,
                 compute_dtype=compute_dtype,
             )
-            # merge: only the prefilled slot's cache rows advance
+            # merge: only the masked slots' cache rows advance
             def merge(old, new):
                 # every cache leaf is layer-stacked: (L, B, ...) -> batch dim 1
                 shape = [1] * old.ndim
@@ -168,90 +188,213 @@ class ServingEngine:
             merged = jax.tree.map(merge, caches, new_caches)
             return logits, merged
 
-        self._prefill = jax.jit(prefill)
-
-        def decode(params, tokens, cache_len, caches, active):
-            logits, new_caches = bundle.forward_step(
-                params,
-                {"tokens": tokens, "cache_len": cache_len},
-                caches,
-                compute_dtype=compute_dtype,
-            )
-            def merge(old, new):
-                shape = [1] * old.ndim
-                shape[1] = n_slots
-                m = active.reshape(shape)
-                return jnp.where(m, new, old)
-
-            return logits, jax.tree.map(merge, caches, new_caches)
-
-        self._decode = jax.jit(decode)
+        # one jitted row-masked forward serves both phases; the two token
+        # shapes (chunk vs 1) are its only two compile-cache entries
+        self._step_fn = jax.jit(step_fn)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: list[int], *, max_tokens: int = 16, eos_id: int | None = None) -> int:
+    def reset_stats(self) -> None:
+        self._counters = {
+            "steps": 0,
+            "prefill_forwards": 0,
+            "prefill_tokens": 0,          # valid prompt tokens (padding excluded)
+            "prefill_s": 0.0,
+            "decode_forwards": 0,
+            "decode_tokens": 0,
+            "decode_s": 0.0,
+            "shape_cache_hits": 0,        # forwards that reused a seen token shape
+        }
+        self._shapes_seen: set[tuple[int, int]] = set()
+
+    def stats(self) -> dict[str, Any]:
+        """Scheduler counters since construction / the last reset_stats()."""
+        c = dict(self._counters)
+        dec_f = c["decode_forwards"]
+        # each decode forward advances one token per active slot, so tokens
+        # per forward IS the occupancy
+        c["decode_occupancy"] = (
+            c["decode_tokens"] / (dec_f * self.n_slots) if dec_f else 0.0
+        )
+        c["prefill_tok_s"] = c["prefill_tokens"] / c["prefill_s"] if c["prefill_s"] else 0.0
+        c["decode_tok_s"] = c["decode_tokens"] / c["decode_s"] if c["decode_s"] else 0.0
+        c["lut_shapes_tuned"] = self.n_lut_shapes_tuned
+        return c
+
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt: list[int],
+        *,
+        max_tokens: int = 16,
+        eos_id: int | None = None,
+        sampling: SamplingParams | None = None,
+    ) -> int:
+        prompt = list(prompt) or [0]
+        # chunk padding writes cache rows up to the padded length, so the
+        # PADDED prompt must fit — an over-long prompt would otherwise have
+        # its scatter writes silently dropped at the max_seq boundary
+        padded = -(-len(prompt) // self.prefill_chunk) * self.prefill_chunk
+        if padded > self.max_seq:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens (chunk-padded to {padded}) "
+                f"exceeds max_seq={self.max_seq}"
+            )
+        if max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
+        # decode writes positions len(prompt) .. len(prompt)+max_tokens-2
+        # (the final token is sampled but never fed back): cap to the cache
+        max_tokens = min(max_tokens, self.max_seq - len(prompt) + 1)
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, list(prompt), max_tokens, eos_id))
+        self.queue.append(
+            Request(rid, prompt, max_tokens, eos_id, sampling or GREEDY)
+        )
         return rid
 
     def _admit(self) -> None:
+        """Fill free slots from the queue. Pure bookkeeping — the admitted
+        slots' prompts are consumed by the shared chunk forward in step()."""
         for i in range(self.n_slots):
             if self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
                 self.slots[i] = req
-                self._do_prefill(i, req)
+                self.cache_len[i] = 0
 
-    def _do_prefill(self, slot: int, req: Request) -> None:
-        prompt = req.prompt or [0]
-        chunk = len(prompt) + ((-len(prompt)) % self.prefill_chunk)
+    def _retire(self, slot: int, req: Request) -> None:
+        req.done = True
+        self.finished.append(req)
+        self.slots[slot] = None
+        self.cache_len[slot] = 0
+
+    def _record(self, tokens: np.ndarray) -> None:
+        shape = tuple(tokens.shape)
+        if shape in self._shapes_seen:
+            self._counters["shape_cache_hits"] += 1
+        self._shapes_seen.add(shape)
+
+    def _sample(self, logits_rows: jax.Array) -> np.ndarray:
+        """Batched sample over all n_slots rows; callers read only the rows
+        of slots they own (other rows ride along with greedy defaults)."""
+        params = [
+            (self.slots[i].sampling if self.slots[i] is not None else GREEDY)
+            for i in range(self.n_slots)
+        ]
+        if all(p.greedy for p in params):
+            # hot default: skip the sort/softmax/categorical machinery —
+            # sample_tokens is argmax-identical for greedy rows
+            return np.asarray(jnp.argmax(logits_rows, axis=-1))
+        counters = [
+            len(self.slots[i].out_tokens) if self.slots[i] is not None else 0
+            for i in range(self.n_slots)
+        ]
+        return np.asarray(sample_tokens(logits_rows, *batch_arrays(params, counters)))
+
+    def _check_done_after_token(self, slot: int, req: Request, tok: int) -> None:
+        """Done-conditions run after EVERY sampled token — including the one
+        produced by prefill, fixing the max_tokens off-by-one."""
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        out_of_cache = self.cache_len[slot] >= self.max_seq   # defensive; capped at submit
+        if hit_eos or len(req.out_tokens) >= req.max_tokens or out_of_cache:
+            self._retire(slot, req)
+
+    # ------------------------------------------------------------------
+    def _prefill_step(self) -> None:
+        """One shared `(n_slots, prefill_chunk)` forward consuming the next
+        chunk of every prefilling slot's prompt."""
+        chunk = self.prefill_chunk
+        pre = [
+            (i, r) for i, r in enumerate(self.slots)
+            if r is not None and not r.prefill_done
+        ]
+        if not pre:
+            return
         toks = np.zeros((self.n_slots, chunk), np.int32)
-        toks[slot, : len(prompt)] = prompt
         cache_len = np.zeros((self.n_slots,), np.int32)
-        cache_len[slot] = 0
         mask = np.zeros((self.n_slots,), bool)
-        mask[slot] = True
-        logits, self.caches = self._prefill(
+        n_new = {}
+        for i, r in pre:
+            part = r.prompt[r.n_prefilled : r.n_prefilled + chunk]
+            toks[i, : len(part)] = part
+            cache_len[i] = r.n_prefilled
+            mask[i] = True
+            n_new[i] = len(part)
+        t0 = time.perf_counter()
+        logits, self.caches = self._step_fn(
             self.params,
             jnp.asarray(toks),
             jnp.asarray(cache_len),
             self.caches,
             jnp.asarray(mask),
         )
-        self.cache_len[slot] = len(prompt)
-        nxt = int(jnp.argmax(logits[slot, len(prompt) - 1]))
-        req.out_tokens.append(nxt)
+        logits = jax.block_until_ready(logits)
+        self._record(toks)
+        self._counters["prefill_forwards"] += 1
+        self._counters["prefill_tokens"] += sum(n_new.values())
+        self._counters["prefill_s"] += time.perf_counter() - t0
 
-    # ------------------------------------------------------------------
-    def step(self) -> None:
-        """One engine step: admit waiting requests, decode all active slots."""
-        self._admit()
-        active = np.array([r is not None for r in self.slots])
-        if not active.any():
+        # sample the first output token for every slot whose prompt just
+        # completed, from that slot's last valid position in this chunk
+        last_idx = np.zeros((self.n_slots,), np.int32)
+        finishing = []
+        for i, r in pre:
+            r.n_prefilled += n_new[i]
+            self.cache_len[i] = r.n_prefilled
+            if r.prefill_done:
+                last_idx[i] = n_new[i] - 1
+                finishing.append((i, r))
+        if not finishing:
+            return
+        rows = logits[jnp.arange(self.n_slots), jnp.asarray(last_idx)]
+        nxt = self._sample(rows)
+        for i, r in finishing:
+            tok = int(nxt[i])
+            r.out_tokens.append(tok)
+            self._check_done_after_token(i, r, tok)
+
+    def _decode_step(self) -> None:
+        """One `(n_slots, 1)` forward advancing every DECODE-phase slot."""
+        dec = [
+            (i, r) for i, r in enumerate(self.slots)
+            if r is not None and r.prefill_done
+        ]
+        if not dec:
             return
         toks = np.zeros((self.n_slots, 1), np.int32)
-        for i, r in enumerate(self.slots):
-            if r is not None:
-                toks[i, 0] = r.out_tokens[-1] if r.out_tokens else (r.prompt[-1] if r.prompt else 0)
-        logits, self.caches = self._decode(
+        mask = np.zeros((self.n_slots,), bool)
+        for i, r in dec:
+            toks[i, 0] = r.out_tokens[-1] if r.out_tokens else r.prompt[-1]
+            mask[i] = True
+        t0 = time.perf_counter()
+        logits, self.caches = self._step_fn(
             self.params,
             jnp.asarray(toks),
             jnp.asarray(self.cache_len),
             self.caches,
-            jnp.asarray(active),
+            jnp.asarray(mask),
         )
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
-        for i, r in enumerate(self.slots):
-            if r is None:
-                continue
+        logits = jax.block_until_ready(logits)
+        self._record(toks)
+        self._counters["decode_forwards"] += 1
+        self._counters["decode_tokens"] += len(dec)
+        self._counters["decode_s"] += time.perf_counter() - t0
+
+        nxt = self._sample(logits[:, 0, :])
+        for i, r in dec:
             self.cache_len[i] += 1
             tok = int(nxt[i])
             r.out_tokens.append(tok)
-            hit_eos = r.eos_id is not None and tok == r.eos_id
-            if hit_eos or len(r.out_tokens) >= r.max_tokens or self.cache_len[i] >= self.max_seq - 1:
-                r.done = True
-                self.finished.append(r)
-                self.slots[i] = None
-                self.cache_len[i] = 0
+            self._check_done_after_token(i, r, tok)
+
+    def step(self) -> None:
+        """One engine step: admit, one prefill chunk, one decode forward.
+
+        Prefill consumes at most one chunk per step so long prompts cannot
+        starve the decode of already-active slots (bounded decode latency).
+        """
+        self._counters["steps"] += 1
+        self._admit()
+        self._prefill_step()
+        self._decode_step()
 
     def run_until_done(self, max_steps: int = 1000) -> list[Request]:
         for _ in range(max_steps):

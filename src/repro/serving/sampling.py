@@ -1,0 +1,101 @@
+"""Token sampling for the serving engine (DESIGN.md §6.2).
+
+Batched temperature / top-k / top-p / greedy sampling over one logits row
+per slot. The whole filter+sample runs as a single jitted `(B, V)` kernel so
+a mixed batch (greedy request next to a temperature-0.9 request) costs one
+forward regardless of composition — per-slot parameters arrive as arrays,
+never as python branches.
+
+Determinism: each sampled token uses `fold_in(PRNGKey(seed), n_sampled)`,
+keyed only on the request's seed and its own token index — never on slot
+placement, batch composition, or prefill chunking — so the same request
+replays identically under any scheduler interleaving (tested in
+tests/test_serving.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling policy.
+
+    temperature <= 0 selects greedy argmax (top_k/top_p are then ignored);
+    top_k == 0 and top_p == 1.0 disable the respective filters.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+@jax.jit
+def sample_tokens(
+    logits: jax.Array,     # (B, V) float
+    temps: jax.Array,      # (B,) float32; <= 0 means greedy
+    top_ks: jax.Array,     # (B,) int32; 0 disables
+    top_ps: jax.Array,     # (B,) float32; 1.0 disables
+    seeds: jax.Array,      # (B,) int32 per-request seed
+    counters: jax.Array,   # (B,) int32 index of the token being sampled
+) -> jax.Array:
+    """One token per row. Greedy rows take argmax of the raw logits, so a
+    greedy request through the sampler is bit-identical to `jnp.argmax`."""
+    b, v = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy = temps <= 0.0
+
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]              # (B, V)
+
+    # top-k: mask everything strictly below the k-th largest value (ties at
+    # the threshold survive — harmless, standard behavior)
+    k_eff = jnp.where(top_ks > 0, jnp.clip(top_ks, 1, v), v)
+    kth = jnp.take_along_axis(sorted_desc, k_eff[:, None] - 1, axis=-1)
+    filtered = jnp.where(scaled < kth, -jnp.inf, scaled)
+
+    # top-p (nucleus): keep the smallest sorted prefix whose mass reaches
+    # top_p; "mass before this token < p" always keeps the top-1 token
+    probs_desc = jax.nn.softmax(sorted_desc, axis=-1)
+    mass_before = jnp.cumsum(probs_desc, axis=-1) - probs_desc
+    keep_sorted = mass_before < top_ps[:, None]                   # prefix mask
+    n_keep = jnp.sum(keep_sorted, axis=-1, dtype=jnp.int32)
+    cutoff = jnp.take_along_axis(sorted_desc, n_keep[:, None] - 1, axis=-1)
+    filtered = jnp.where(scaled < cutoff, -jnp.inf, filtered)
+
+    def draw(seed, counter, row):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), counter)
+        return jax.random.categorical(key, row)
+
+    sampled = jax.vmap(draw)(seeds, counters, filtered)
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled).astype(jnp.int32)
+
+
+def batch_arrays(params: list[SamplingParams], counters: list[int]):
+    """Pack per-slot SamplingParams into the arrays `sample_tokens` takes."""
+    return (
+        jnp.asarray(np.array([p.temperature for p in params], np.float32)),
+        jnp.asarray(np.array([p.top_k for p in params], np.int32)),
+        jnp.asarray(np.array([p.top_p for p in params], np.float32)),
+        jnp.asarray(np.array([p.seed for p in params], np.int32)),
+        jnp.asarray(np.array(counters, np.int32)),
+    )
