@@ -1,0 +1,43 @@
+"""Profile one (arch x shape) dry-run cell: roofline terms + HLO hotspots.
+
+  python benchmarks/profile_cell.py qwen3_1p7b decode_32k
+  python benchmarks/profile_cell.py llama3_8b train_4k '{"mode": "lut_train"}'
+
+Must own the first jax import: it forces 512 host devices before any
+device state exists, so run it as a standalone script, not via
+benchmarks/run.py.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.dryrun import lower_cell
+from repro.roofline.hlo_cost import hotspots
+
+
+def main() -> None:
+    arch, shape = sys.argv[1], sys.argv[2]
+    kw = json.loads(sys.argv[3]) if len(sys.argv) > 3 else {}
+    rec, compiled = lower_cell(arch, shape, **kw)
+    r = rec["roofline"]
+    print(f"== {arch} x {shape} {kw} ==")
+    print(f"mem/dev {rec['memory']['total_hbm_bytes']/2**30:.2f} GiB | "
+          f"t_comp {r['t_compute_s']:.3f}s t_mem {r['t_memory_s']:.3f}s "
+          f"t_coll {r['t_collective_s']:.3f}s -> {r['bottleneck']}")
+    print("collectives by kind (GB/dev):",
+          {k: round(v / 1e9, 2) for k, v in r["collective_by_kind"].items()})
+    print(f"{'op_name':70s} {'GFLOP':>9s} {'GB':>9s} {'collGB':>8s}")
+    for name, c in hotspots(compiled.as_text(), top=22, depth=5):
+        print(f"{name[:70]:70s} {c.flops/1e9:9.1f} {c.bytes/1e9:9.2f} "
+              f"{c.coll_bytes/1e9:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

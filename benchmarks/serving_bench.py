@@ -1,6 +1,14 @@
 """Serving-engine throughput: decode tok/s, prefill tok/s, and batch
-occupancy at two request loads (under-subscribed and over-subscribed slot
-pool), through the LUT_INFER int8-table model.
+occupancy through the LUT_INFER int8-table model, across four configs:
+
+  * light_2req / heavy_12req — under- vs over-subscribed slot pool,
+    in-memory params (the PR-2 baseline rows)
+  * artifact_12req — the same heavy load served from a LUTArtifact
+    round-tripped through disk (DESIGN.md §8): any artifact-load overhead
+    or drift shows up against heavy_12req
+  * tp2_12req — heavy load on a (1, 2) ("data", "model") mesh in a
+    subprocess with 2 forced host devices (the tests/_subproc.py pattern),
+    measuring the tensor-parallel engine path end to end
 
 A warm-up request compiles the engine's two token shapes off the clock, so
 the rows measure steady-state scheduler throughput, not jit. With
@@ -11,8 +19,11 @@ BENCH_serving.json so serving perf joins the BENCH_kernels.json trajectory.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import subprocess
 import sys
+import tempfile
 import time
 
 import jax
@@ -29,19 +40,17 @@ MAX_TOKENS = 8
 # loads: half the slot pool (occupancy-starved) vs 3x the pool (saturated,
 # requests queue behind busy slots)
 LOADS = [("light_2req", 2), ("heavy_12req", 12)]
+_TP2_MARKER = "TP2_ROW "
 
 
-def _run_load(bundle, params, n_requests: int) -> dict:
+def _run_load(bundle, params, n_requests: int, *, mesh=None) -> dict:
     eng = ServingEngine(
         bundle, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
         prefill_chunk=PREFILL_CHUNK, compute_dtype=jnp.float32,
-        autotune_lut=False,
+        autotune_lut=False, mesh=mesh,
     )
     # warm-up: compile the chunked-prefill and decode shapes off the clock
-    eng.submit(list(range(1, PREFILL_CHUNK + 2)), max_tokens=2)
-    eng.run_until_done()
-    eng.finished.clear()
-    eng.reset_stats()
+    eng.warmup()
 
     key = jax.random.PRNGKey(2)
     t0 = time.perf_counter()
@@ -59,6 +68,7 @@ def _run_load(bundle, params, n_requests: int) -> dict:
         "requests": n_requests,
         "n_slots": N_SLOTS,
         "prefill_chunk": PREFILL_CHUNK,
+        "tp": 1 if mesh is None else int(mesh.shape["model"]),
         "steps": st["steps"],
         "prefill_tokens": st["prefill_tokens"],
         "prefill_forwards": st["prefill_forwards"],
@@ -72,23 +82,74 @@ def _run_load(bundle, params, n_requests: int) -> dict:
     }
 
 
-def main(json_path: str | pathlib.Path | None = None) -> list[dict]:
+def _bundle_and_params():
     arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2)
     bundle = build_model(arch, Mode.LUT_INFER)
-    params = bundle.init(jax.random.PRNGKey(0))
+    return bundle, bundle.init(jax.random.PRNGKey(0))
+
+
+def _tp2_row(timeout: int = 900) -> dict:
+    """Heavy load on a tp=2 mesh, in a subprocess with 2 forced host
+    devices (the tests/_subproc.py pattern — works on any host)."""
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    env = dict(os.environ)
+    # append (not replace) so user-set XLA flags apply to the tp2 row too —
+    # otherwise the tp=1 vs tp=2 rows would measure different XLA configs
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    env["PYTHONPATH"] = str(src) + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, str(pathlib.Path(__file__).resolve()), "--tp2-child"],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"tp2 child failed:\n{out.stdout}\n{out.stderr}")
+    for line in out.stdout.splitlines():
+        if line.startswith(_TP2_MARKER):
+            return json.loads(line[len(_TP2_MARKER):])
+    raise RuntimeError(f"tp2 child printed no row:\n{out.stdout}")
+
+
+def _tp2_child() -> None:
+    from repro.launch.mesh import make_host_mesh
+
+    bundle, params = _bundle_and_params()
+    mesh = make_host_mesh(data=1, model=2)
+    row = {"load": "tp2_12req", **_run_load(bundle, params, 12, mesh=mesh)}
+    print(_TP2_MARKER + json.dumps(row))
+
+
+def main(json_path: str | pathlib.Path | None = None) -> list[dict]:
+    bundle, params = _bundle_and_params()
 
     rows = []
-    cols = ["load", "requests", "decode_tok_s", "prefill_tok_s",
+    cols = ["load", "requests", "tp", "decode_tok_s", "prefill_tok_s",
             "decode_occupancy", "steps", "shape_cache_hits"]
     print(",".join(cols))
-    for load, n in LOADS:
-        row = {"load": load, **_run_load(bundle, params, n)}
+
+    def emit(row):
         rows.append(row)
         print(",".join(str(row[c]) for c in cols))
 
+    for load, n in LOADS:
+        emit({"load": load, **_run_load(bundle, params, n)})
+
+    # artifact-loaded engine: disk round trip, then the heavy load again
+    with tempfile.TemporaryDirectory() as td:
+        from repro.serving.artifact import load_artifact, save_artifact
+
+        save_artifact(pathlib.Path(td) / "art", bundle, params)
+        art = load_artifact(pathlib.Path(td) / "art")
+        emit({"load": "artifact_12req", **_run_load(art.bundle, art.params, 12)})
+
+    try:
+        emit(_tp2_row())
+    except Exception as e:  # noqa: BLE001 — the tp row is best-effort
+        print(f"# tp2 row skipped: {e!r:.200}")
+
     if json_path is not None:
         payload = {
-            "schema": "serving_bench.v1",
+            "schema": "serving_bench.v2",
             "arch": "qwen3_1p7b(reduced,L=2)",
             "mode": "lut_infer",
             "backend": jax.default_backend(),
@@ -100,5 +161,8 @@ def main(json_path: str | pathlib.Path | None = None) -> list[dict]:
 
 
 if __name__ == "__main__":
-    _JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
-    main(json_path=_JSON if "--json" in sys.argv else None)
+    if "--tp2-child" in sys.argv:
+        _tp2_child()
+    else:
+        _JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+        main(json_path=_JSON if "--json" in sys.argv else None)

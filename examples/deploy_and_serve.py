@@ -1,0 +1,36 @@
+"""The full LUT-NN lifecycle in one script (DESIGN.md §8):
+
+  dense pretrain -> k-means convert -> soft-PQ fine-tune -> int8 deploy
+  -> LUTArtifact on disk -> serve the DEPLOYED tables from the artifact.
+
+This is the train half (`launch/train.py --lut`, reduced to ~2 minutes on a
+laptop CPU) handing off to the serve half (`launch/serve.py --artifact`)
+through the self-describing artifact directory — no pytree plumbing between
+the two processes.
+
+  PYTHONPATH=src python examples/deploy_and_serve.py
+
+For tensor-parallel serving of the same artifact over 2 (forced host)
+devices, re-run the serve half alone:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \\
+  python -m repro.launch.serve --artifact /tmp/repro_example_artifact --tp 2
+"""
+
+import tempfile
+
+from repro.launch.serve import main as serve_main
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    artifact_dir = "/tmp/repro_example_artifact"
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        train_main([
+            "--arch", "qwen3_1p7b", "--d-model", "64", "--layers", "2",
+            "--vocab", "128", "--seq", "32", "--batch", "8", "--steps", "20",
+            "--lut", "--ckpt-dir", ckpt_dir, "--artifact-dir", artifact_dir,
+        ])
+    serve_main([
+        "--artifact", artifact_dir, "--requests", "8", "--slots", "4",
+        "--max-seq", "64", "--prefill-chunk", "8", "--max-tokens", "12",
+    ])

@@ -5,14 +5,11 @@ nucleus sampling.
   PYTHONPATH=src python examples/serve_batched.py
 """
 
-import sys
-
 from repro.launch.serve import main as serve_main
 
 if __name__ == "__main__":
-    sys.argv = [
-        "serve", "--arch", "qwen3_1p7b", "--requests", "8", "--slots", "4",
+    serve_main([
+        "--arch", "qwen3_1p7b", "--requests", "8", "--slots", "4",
         "--prefill-chunk", "8", "--temperature", "0.8", "--top-p", "0.95",
         "--seed", "0",
-    ]
-    serve_main()
+    ])

@@ -1,14 +1,16 @@
 """End-to-end driver (deliverable b): dense pretrain -> convert -> soft-PQ
-QAT fine-tune -> int8 deploy -> eval, on a real (reduced) registry arch.
+QAT fine-tune -> int8 deploy -> eval + LUTArtifact, on a real (reduced)
+registry arch.
 
   PYTHONPATH=src python examples/train_softpq_pipeline.py [--steps 200]
 
 This is the same flow `python -m repro.launch.train --lut` runs; kept as a
-standalone script so it can be stepped through.
+standalone script so it can be stepped through. The emitted artifact serves
+with `python -m repro.launch.serve --artifact <dir>` (examples/
+deploy_and_serve.py shows the full loop).
 """
 
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 
@@ -17,8 +19,7 @@ if __name__ == "__main__":
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--arch", default="qwen3_1p7b")
     args = ap.parse_args()
-    sys.argv = [
-        "train", "--arch", args.arch, "--steps", str(args.steps), "--lut",
+    train_main([
+        "--arch", args.arch, "--steps", str(args.steps), "--lut",
         "--d-model", "256", "--layers", "4",
-    ]
-    train_main()
+    ])

@@ -32,12 +32,21 @@ import jax
 import numpy as np
 
 
-def _flatten(tree: Any) -> dict[str, np.ndarray]:
-    flat = {}
-    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
-        flat[path] = np.asarray(leaf)
-    return flat
+def tree_paths(tree: Any) -> list[str]:
+    """Slash-joined key path of every leaf, in tree-flatten order — the one
+    path convention shared by checkpoints and deployment artifacts."""
+    out = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out.append("/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp))
+    return out
+
+
+def flatten_tree(tree: Any) -> dict[str, np.ndarray]:
+    """{path: host ndarray} for every leaf (dtype-preserving)."""
+    return dict(zip(
+        tree_paths(tree),
+        (np.asarray(leaf) for leaf in jax.tree_util.tree_leaves(tree)),
+    ))
 
 
 class Checkpointer:
@@ -70,7 +79,7 @@ class Checkpointer:
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
-        flat = _flatten(host_tree)
+        flat = flatten_tree(host_tree)
         np.savez(tmp / "arrays.npz", **flat)
         treedef = jax.tree_util.tree_structure(host_tree)
         manifest = {
@@ -114,12 +123,8 @@ class Checkpointer:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        data = np.load(self.dir / f"step_{step:08d}" / "arrays.npz")
-
-        paths = []
-        for kp, _ in jax.tree_util.tree_flatten_with_path(like)[0]:
-            paths.append("/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp))
-        leaves = [data[p] for p in paths]
+        with np.load(self.dir / f"step_{step:08d}" / "arrays.npz") as data:
+            leaves = [data[p] for p in tree_paths(like)]
         treedef = jax.tree_util.tree_structure(like)
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:

@@ -128,6 +128,44 @@ def get_arch(name: str) -> ArchSpec:
     return mod.ARCH
 
 
+# ---------------------------------------------------------------------------
+# arch-spec serialization (deployment artifacts, DESIGN.md §8.1)
+# ---------------------------------------------------------------------------
+
+def arch_to_dict(arch: ArchSpec) -> dict[str, Any]:
+    """JSON-safe dict of every ArchSpec field (tuples become lists)."""
+    out = dataclasses.asdict(arch)
+    for k, v in out.items():
+        if isinstance(v, tuple):
+            out[k] = list(v)
+    return out
+
+
+def arch_from_dict(d: dict[str, Any]) -> ArchSpec:
+    """Rebuild an ArchSpec from `arch_to_dict` output.
+
+    Unknown keys (written by a newer repo) are ignored so old readers stay
+    forward-compatible; list-valued fields are restored to tuples.
+    """
+    fields = {f.name: f for f in dataclasses.fields(ArchSpec)}
+    kw: dict[str, Any] = {}
+    for k, v in d.items():
+        if k not in fields:
+            continue
+        if isinstance(v, list):
+            v = tuple(v)
+        kw[k] = v
+    missing = [
+        n for n, f in fields.items()
+        if n not in kw
+        and f.default is dataclasses.MISSING
+        and f.default_factory is dataclasses.MISSING
+    ]
+    if missing:
+        raise ValueError(f"arch dict missing required fields: {missing}")
+    return ArchSpec(**kw)
+
+
 def all_archs() -> list[ArchSpec]:
     return [get_arch(n) for n in ARCH_IDS]
 

@@ -7,7 +7,10 @@
      activation tape on, cluster every replaced site's inputs per codebook
      (Eq. 1), write the centroids into the LUT params.
   3. (after soft-PQ fine-tuning) deploy: build + int8-quantize the tables,
-     drop the dense weights -> the serving param tree.
+     drop the dense weights -> the serving param tree; `deploy_to_artifact`
+     additionally packages the result as an on-disk LUTArtifact
+     (repro.serving.artifact, DESIGN.md §8) so a fresh server can load it
+     with no knowledge of the train-time pytree.
 
 Wired end-to-end for the LM family (incl. BERT); the per-site primitives in
 repro.core.lut_layer are model-agnostic.
@@ -194,3 +197,19 @@ def deploy_lut_train_params(bundle_lut: ModelBundle, lut_params: Any) -> tuple[M
     leaves = [out[p] for p in iflat]
     tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(inf_params), leaves)
     return build_model(bundle_lut.arch, Mode.LUT_INFER), tree
+
+
+def deploy_to_artifact(
+    bundle_lut: ModelBundle, lut_params: Any, directory: str | Any
+) -> tuple[ModelBundle, Any]:
+    """Deploy LUT_TRAIN params and write the serving tree as a LUTArtifact.
+
+    The returned (bundle, params) serve directly; the artifact directory is
+    what ships — `launch/serve.py --artifact <dir>` (or
+    `repro.serving.artifact.load_artifact`) reconstructs both.
+    """
+    from repro.serving.artifact import save_artifact
+
+    bundle_inf, inf_params = deploy_lut_train_params(bundle_lut, lut_params)
+    save_artifact(directory, bundle_inf, inf_params)
+    return bundle_inf, inf_params

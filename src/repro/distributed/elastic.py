@@ -46,11 +46,12 @@ class ElasticContext:
     ) -> "ElasticContext":
         import numpy as np
 
+        from repro.launch.mesh import mesh_from_devices
+
         data, model = best_mesh_shape(len(devices), prefer_model=prefer_model)
-        mesh = jax.sharding.Mesh(
+        mesh = mesh_from_devices(
             np.asarray(devices[: data * model]).reshape(data, model),
             ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
         )
         rules = ShardingRules(mesh, fsdp=fsdp)
         return cls(mesh=mesh, rules=rules, step_fn=make_step(mesh, rules))

@@ -1,28 +1,70 @@
 """Production mesh construction.
 
-A function (not a module-level constant) so importing this module never
+Functions (not module-level constants) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS before first init.
+
+`make_mesh` here is the one mesh constructor the repo uses: it requests
+explicit `Auto` axis types on jax versions that support them and falls back
+cleanly on versions that predate `jax.sharding.AxisType` (where every axis
+is implicitly auto-sharded, i.e. the same semantics).
 """
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
+
+
+def _auto_axis_types_kw(n_axes: int) -> dict:
+    """{'axis_types': (Auto,)*n} on jax versions that have AxisType, else {}."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """Version-portable `jax.make_mesh` with Auto axis types when available."""
+    axes = tuple(axes)
+    kw = _auto_axis_types_kw(len(axes))
+    if kw:
+        try:
+            return jax.make_mesh(tuple(shape), axes, **kw)
+        except TypeError:
+            pass                     # make_mesh predates the kwarg
+    return jax.make_mesh(tuple(shape), axes)
+
+
+def mesh_from_devices(devices, axes: Sequence[str]) -> jax.sharding.Mesh:
+    """Version-portable `jax.sharding.Mesh` over an explicit device array
+    (the elastic-rescale path, where the surviving devices are hand-picked)."""
+    axes = tuple(axes)
+    try:
+        return jax.sharding.Mesh(devices, axes, **_auto_axis_types_kw(len(axes)))
+    except TypeError:
+        return jax.sharding.Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(*, data: int | None = None, model: int = 1) -> jax.sharding.Mesh:
-    """Small mesh over whatever devices exist (tests / examples)."""
+    """Small mesh over whatever devices exist (tests / examples / serving).
+
+    `model` is the tensor-parallel degree; `data` defaults to using every
+    remaining device. Raises if the host doesn't have enough devices.
+    """
     n = jax.device_count()
     if data is None:
-        data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        data = max(1, n // model)
+    if data * model > n:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {data * model} devices, "
+            f"host has {n} (set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            f"for CPU testing)"
+        )
+    return make_mesh((data, model), ("data", "model"))

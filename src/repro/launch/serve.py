@@ -1,8 +1,15 @@
 """Serving launcher: batched requests through the continuous-batching engine
 with a LUT_INFER (int8 table) model.
 
+  # serve a deployed artifact (the output of launch/train.py --lut):
+  PYTHONPATH=src python -m repro.launch.serve --artifact /tmp/ckpt_artifact
+
+  # tensor-parallel over 2 devices, bfloat16 compute:
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+  PYTHONPATH=src python -m repro.launch.serve --artifact <dir> --tp 2 --dtype bfloat16
+
+  # no artifact: randomly-initialized tables (smoke/perf mode only)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1p7b --requests 8
-  PYTHONPATH=src python -m repro.launch.serve --temperature 0.8 --top-p 0.95
 
 A warm-up request runs (and is discarded) before the timed region so the
 reported tok/s measures steady state, not the one-off jit compile of the
@@ -23,14 +30,28 @@ from repro.serving.engine import ServingEngine
 from repro.serving.sampling import SamplingParams
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3_1p7b")
+    ap.add_argument("--artifact", default=None,
+                    help="path to a LUTArtifact directory (launch/train.py "
+                         "--lut output): serve the DEPLOYED tables instead "
+                         "of randomly-initialized ones")
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3_1p7b",
+                    help="arch for random-init mode (ignored with --artifact: "
+                         "the manifest carries the arch)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard tables/weights over "
+                         "a (1, tp) ('data','model') mesh (needs >= tp "
+                         "devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--dtype", choices=("float32", "bfloat16"), default="float32",
+                    help="engine compute dtype; also keys the LUT autotune "
+                         "warmup so tuned blocks match runtime")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature; 0 = greedy")
     ap.add_argument("--top-k", type=int, default=0, help="top-k filter; 0 disables")
@@ -41,29 +62,39 @@ def main() -> None:
                          "includes jit compile)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="run LUT sites through the fused Pallas v2 kernel "
-                         "(autotuner-warmed; interpret mode off-TPU)")
-    args = ap.parse_args()
+                         "(random-init mode; artifacts carry their own "
+                         "lut_use_kernel setting)")
+    args = ap.parse_args(argv)
 
-    arch = reduce_arch(get_arch(args.arch), lut_use_kernel=args.use_kernel)
-    bundle = build_model(arch, Mode.LUT_INFER)
-    params = bundle.init(jax.random.PRNGKey(0))
+    if args.artifact:
+        from repro.serving.artifact import load_artifact
+
+        art = load_artifact(args.artifact)
+        bundle, params = art.bundle, art.params
+        use_kernel = bundle.arch.lut_use_kernel
+        source = f"artifact {args.artifact} ({art.arch_name})"
+    else:
+        arch = reduce_arch(get_arch(args.arch), lut_use_kernel=args.use_kernel)
+        bundle = build_model(arch, Mode.LUT_INFER)
+        params = bundle.init(jax.random.PRNGKey(0))
+        use_kernel = args.use_kernel
+        source = f"random init ({arch.name})"
+
+    mesh = None
+    if args.tp > 1:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(data=1, model=args.tp)
+
+    compute_dtype = jnp.bfloat16 if args.dtype == "bfloat16" else jnp.float32
     eng = ServingEngine(
         bundle, params, n_slots=args.slots, max_seq=args.max_seq,
-        prefill_chunk=args.prefill_chunk, compute_dtype=jnp.float32,
+        prefill_chunk=args.prefill_chunk, compute_dtype=compute_dtype,
+        mesh=mesh,
     )
 
     if not args.no_warmup:
-        # compile both engine shapes (chunk prefill + decode) off the clock;
-        # use a >chunk prompt when the cache allows so the chunked path warms,
-        # and keep len <= max_seq-1 so max_tokens=2 survives the submit() cap
-        # (the warm-up must reach a decode forward)
-        wlen = (args.prefill_chunk + 1
-                if 2 * args.prefill_chunk <= args.max_seq
-                else min(args.prefill_chunk, args.max_seq - 1))
-        eng.submit(list(range(1, wlen + 1)), max_tokens=2)
-        eng.run_until_done()
-        eng.finished.clear()
-        eng.reset_stats()
+        eng.warmup()          # compile both engine shapes off the clock
 
     key = jax.random.PRNGKey(1)
     t0 = time.time()
@@ -81,11 +112,13 @@ def main() -> None:
     done = eng.run_until_done()
     dt = max(time.time() - t0, 1e-9)
     total_tok = sum(len(r.out_tokens) for r in done)
-    mode = "pallas-v2 kernel" if args.use_kernel else "XLA one-hot"
+    mode = "pallas-v2 kernel" if use_kernel else "XLA one-hot"
     st = eng.stats()
+    tp = f", tp={args.tp}" if mesh is not None else ""
     print(f"{len(done)} requests, {total_tok} tokens in {dt:.1f}s "
           f"({total_tok/dt:.1f} tok/s, {args.slots} slots, LUT INT8 tables, "
-          f"{mode}, {eng.n_lut_shapes_tuned} LUT shapes autotuned)")
+          f"{mode}, {args.dtype}{tp}, {source}, "
+          f"{eng.n_lut_shapes_tuned} LUT shapes autotuned)")
     print(f"  steps={st['steps']} prefill: {st['prefill_tokens']} tok / "
           f"{st['prefill_forwards']} fwd ({st['prefill_tok_s']:.1f} tok/s)  "
           f"decode: {st['decode_tokens']} tok / {st['decode_forwards']} fwd "

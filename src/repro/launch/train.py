@@ -4,7 +4,9 @@ Runs the full LUT-NN lifecycle on any registered arch at a CPU-feasible
 reduction, or lowers the production config when --dryrun is given:
 
   dense pretrain -> convert (k-means init) -> soft-PQ QAT fine-tune ->
-  int8 deploy -> eval.
+  int8 deploy -> eval -> LUTArtifact written to --artifact-dir
+  (the train half of the train -> deploy -> serve lifecycle; the serve
+  half is `launch/serve.py --artifact <dir>`).
 
 Example (the (b) end-to-end driver; ~100M-param model for a few hundred
 steps):
@@ -31,7 +33,7 @@ from repro.train.train_step import make_train_step
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS + ("bert_base",), default="qwen3_1p7b")
     ap.add_argument("--d-model", type=int, default=256)
@@ -42,7 +44,12 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--lut", action="store_true", help="run the full LUT pipeline")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
-    args = ap.parse_args()
+    ap.add_argument("--artifact-dir", default=None,
+                    help="where the deployed LUTArtifact is written at the "
+                         "end of the --lut pipeline (default: "
+                         "<ckpt-dir>_artifact); serve it with "
+                         "launch/serve.py --artifact <dir>")
+    args = ap.parse_args(argv)
 
     arch = reduce_arch(
         get_arch(args.arch),
@@ -96,9 +103,12 @@ def main() -> None:
     lparams, _ = trainer2.fit(lparams, opt2.init(lparams, frozen), start_step=0)
     print(f"soft-PQ fine-tune final loss {trainer2.history[-1]['loss']:.4f}")
 
-    binf, iparams = convert.deploy_lut_train_params(blut, lparams)
+    artifact_dir = args.artifact_dir or args.ckpt_dir + "_artifact"
+    binf, iparams = convert.deploy_to_artifact(blut, lparams, artifact_dir)
     eval_loss = binf.loss(iparams, data.batch_at(99_999), compute_dtype=jnp.float32)
     print(f"deployed INT8 LUT eval loss: {float(eval_loss):.4f}")
+    print(f"wrote LUTArtifact to {artifact_dir} "
+          f"(serve: python -m repro.launch.serve --artifact {artifact_dir})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,282 @@
+"""Versioned LUT deployment artifact: the train → serve hand-off (DESIGN.md §8).
+
+`launch/train.py --lut` ends with deployed LUT_INFER params (int8 tables +
+fp32 scales/centroids). This module packages them as a self-describing
+on-disk directory a fresh server can load with **no** hand-built `like`
+tree — the manifest carries everything needed to rebuild the model:
+
+  <dir>/
+      manifest.json     format+version, arch-spec fields, mode, bundle kind,
+                        tree structure + per-leaf shape/dtype
+      arrays.npz        every param leaf keyed by tree path (dtype-exact:
+                        int8 tables stay int8)
+      autotune.json     snapshot of the warmed kernel block-size cache, so a
+                        fresh server starts with tuned tilings instead of
+                        re-deriving (or re-measuring) them
+
+Writes follow the Checkpointer's atomic discipline: everything lands in
+`<dir>.tmp`, then one `os.replace` commits — a crash mid-write can never
+produce a half-readable artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import flatten_tree, tree_paths
+from repro.configs import ModelBundle, arch_from_dict, arch_to_dict, build_model
+from repro.core.amm import Mode
+from repro.kernels import autotune
+
+FORMAT = "lut-artifact"
+VERSION = 1
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+_AUTOTUNE = "autotune.json"
+
+# npz cannot represent bfloat16 (it stores raw void bytes that never load
+# back); bf16 leaves travel as uint16 bit patterns, with the manifest's
+# dtype string as the restore key
+_BF16 = np.dtype(jnp.bfloat16)
+
+
+@dataclasses.dataclass(frozen=True)
+class LUTArtifact:
+    """A loaded deployment artifact: the rebuilt bundle + host params."""
+
+    bundle: ModelBundle
+    params: Any
+    manifest: dict[str, Any]
+    path: pathlib.Path
+
+    @property
+    def arch_name(self) -> str:
+        return self.manifest["arch"]["name"]
+
+
+def save_artifact(
+    directory: str | os.PathLike,
+    bundle: ModelBundle,
+    params: Any,
+    *,
+    autotune_snapshot: bool = True,
+) -> pathlib.Path:
+    """Write `(bundle, params)` as a LUTArtifact directory (atomic).
+
+    `params` is typically the LUT_INFER tree from
+    `convert.deploy_lut_train_params`; any bundle/tree pair round-trips,
+    so dense baselines can ship through the same path.
+    """
+    final = pathlib.Path(directory)
+    tmp = final.parent / (final.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), params)
+    flat = flatten_tree(host)
+    np.savez(tmp / _ARRAYS, **{
+        k: (v.view(np.uint16) if v.dtype == _BF16 else v)
+        for k, v in flat.items()
+    })
+
+    manifest = {
+        "format": FORMAT,
+        "version": VERSION,
+        "arch": arch_to_dict(bundle.arch),
+        "mode": bundle.mode.value,
+        "kind": bundle.kind,
+        "treedef": str(jax.tree_util.tree_structure(host)),
+        "leaves": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in flat.items()
+        },
+    }
+    (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=2))
+
+    if autotune_snapshot:
+        entries = _snapshot_entries(bundle)
+        (tmp / _AUTOTUNE).write_text(
+            json.dumps({"version": 1, "entries": entries}, indent=1, sort_keys=True)
+        )
+
+    # commit: move any previous artifact aside BEFORE the replace
+    # (os.replace cannot target a non-empty directory). A crash between the
+    # two replaces leaves the previous artifact intact at <dir>.old, which
+    # load_artifact falls back to — at every instant one of the two is
+    # loadable. A stale .old (from such a crash) is only cleared while
+    # <dir> itself exists, preserving that invariant across re-deploys.
+    old = final.parent / (final.name + ".old")
+    if final.exists():
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(final, old)
+    os.replace(tmp, final)
+    if old.exists():
+        shutil.rmtree(old)
+    return final
+
+
+def _snapshot_entries(bundle: ModelBundle) -> dict[str, Any]:
+    """Autotune cache entries belonging to THIS bundle's LUT kernel sites.
+
+    The process cache may hold winners for other archs/backends; shipping
+    those would make every server that loads the artifact inherit them
+    forever (restored entries suppress re-tuning). Keys are matched on the
+    (m, c, k, v) site signature — any n/dtype/backend, since serve-time
+    slot counts and hardware are unknown at deploy time.
+    """
+    from repro.serving.engine import iter_lut_kernel_sites
+
+    sites = set()
+    for site in iter_lut_kernel_sites(bundle.cfg):
+        lut = site.lut
+        c = site.d_in // lut.v
+        sites.add(("lut_amm", site.d_out, c, lut.k, lut.v))
+        sites.add(("encode", 0, c, lut.k, lut.v))        # shared-encode path
+    if not sites:
+        return {}
+
+    def key_sig(key: str) -> tuple | None:
+        parts = key.split("|")
+        try:
+            kind = parts[0]
+            f = dict(p.split("=", 1) for p in parts[1:])
+            return kind, int(f["m"]), int(f["c"]), int(f["k"]), int(f["v"])
+        except (IndexError, KeyError, ValueError):
+            return None
+
+    return {
+        k: dict(rec)
+        for k, rec in autotune.get_cache().load().items()
+        if key_sig(k) in sites
+    }
+
+
+def _read_manifest(directory: pathlib.Path) -> dict[str, Any]:
+    try:
+        manifest = json.loads((directory / _MANIFEST).read_text())
+    except FileNotFoundError:
+        raise FileNotFoundError(f"no {_MANIFEST} in {directory} — not an artifact")
+    if manifest.get("format") != FORMAT:
+        raise ValueError(f"{directory}: format={manifest.get('format')!r}, "
+                         f"expected {FORMAT!r}")
+    if manifest.get("version") != VERSION:
+        raise ValueError(f"{directory}: artifact version "
+                         f"{manifest.get('version')} unsupported (reader: {VERSION})")
+    return manifest
+
+
+def load_artifact(
+    directory: str | os.PathLike, *, restore_autotune: bool = True
+) -> LUTArtifact:
+    """Rebuild the model and params from a saved artifact.
+
+    No `like` tree needed: the arch spec is reconstructed from the manifest,
+    the param tree structure from `jax.eval_shape` of the rebuilt bundle's
+    init, and every leaf is validated (path, shape, dtype) against both the
+    manifest and the live model before device_put. A repo drift that changes
+    the param tree therefore fails loudly at load, not as NaNs at serve.
+    """
+    primary = pathlib.Path(directory)
+    resolved = primary
+    if not (primary / _MANIFEST).exists():
+        # a crash mid-re-deploy (between save_artifact's two os.replace
+        # calls) strands the previous good artifact at <dir>.old
+        old = primary.parent / (primary.name + ".old")
+        if (old / _MANIFEST).exists():
+            resolved = old
+    try:
+        return _load_resolved(resolved, restore_autotune=restore_autotune)
+    except FileNotFoundError:
+        if resolved == primary:
+            raise
+        # live-deployer race: .old vanished because the re-deploy committed
+        # while we were reading it — the new artifact is at <dir> now
+        return _load_resolved(primary, restore_autotune=restore_autotune)
+
+
+def _load_resolved(directory: pathlib.Path, *, restore_autotune: bool) -> LUTArtifact:
+    manifest = _read_manifest(directory)
+
+    arch = arch_from_dict(manifest["arch"])
+    bundle = build_model(arch, Mode(manifest["mode"]))
+    if bundle.kind != manifest["kind"]:
+        raise ValueError(
+            f"rebuilt bundle kind {bundle.kind!r} != manifest {manifest['kind']!r}"
+        )
+
+    specs = bundle.param_specs()
+    paths = tree_paths(specs)
+    spec_leaves = jax.tree_util.tree_leaves(specs)
+
+    recorded = manifest["leaves"]
+    leaves = []
+    with np.load(directory / _ARRAYS) as data:
+        missing = [p for p in paths if p not in recorded or p not in data.files]
+        extra = sorted(set(data.files) - set(paths))
+        if missing or extra:
+            raise ValueError(
+                f"artifact/model tree mismatch: missing={missing[:4]} extra={extra[:4]}"
+            )
+        for p, spec in zip(paths, spec_leaves):
+            a = data[p]
+            rec = recorded[p]
+            if rec["dtype"] == "bfloat16" and a.dtype == np.uint16:
+                a = a.view(_BF16)                    # undo the npz bf16 detour
+            if list(a.shape) != rec["shape"] or str(a.dtype) != rec["dtype"]:
+                raise ValueError(f"{p}: stored {a.shape}/{a.dtype} != manifest {rec}")
+            if a.shape != spec.shape or a.dtype != spec.dtype:
+                raise ValueError(
+                    f"{p}: artifact {a.shape}/{a.dtype} != model {spec.shape}/{spec.dtype}"
+                )
+            leaves.append(a)
+    params = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(specs), leaves
+    )
+    # commit leaves to device now — host numpy leaves would be re-uploaded
+    # on every engine forward (a mesh-constructed engine re-places them
+    # under its sharding specs; that device->device move is cheap)
+    params = jax.tree.map(jax.device_put, params)
+
+    if restore_autotune:
+        restore_autotune_snapshot(directory)
+    return LUTArtifact(bundle=bundle, params=params, manifest=manifest,
+                       path=directory)
+
+
+def restore_autotune_snapshot(directory: str | os.PathLike) -> int:
+    """Merge the artifact's autotune winners into the process cache.
+
+    Existing entries win (a live measured winner beats a shipped analytic
+    one); returns the number of entries merged. Persistence failures are
+    swallowed — the snapshot is an optimization, never a load dependency.
+    """
+    path = pathlib.Path(directory) / _AUTOTUNE
+    cache = autotune.get_cache()
+    merged = 0
+    try:
+        raw = json.loads(path.read_text())
+        entries = raw["entries"] if raw.get("version") == 1 else {}
+        for key, rec in entries.items():
+            if cache.get(key) is None:
+                cache.put(key, dict(rec))
+                merged += 1
+    except (OSError, ValueError, KeyError, TypeError, AttributeError):
+        return merged                    # malformed snapshot: never fatal
+    if merged:
+        try:
+            cache.save()
+        except OSError:
+            pass
+    return merged

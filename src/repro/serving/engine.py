@@ -31,6 +31,15 @@ the engine is pure host-side orchestration, so it works identically on
 1 CPU device and a 512-chip mesh. Limitation: padded prefill rows assume
 position-indexed caches (attention masks padding causally); SSM state is
 sequential, so mamba-family bundles need chunk-aligned prompts.
+
+* **Mesh-sharded construction** (DESIGN.md §6.4) — pass `mesh=` (and
+  optionally `rules=`) and the engine becomes tensor-parallel: params are
+  device_put under `distributed.sharding`'s specs (`table_q` column-sharded
+  over M on "model", `table_scale`/`centroids` replicated), KV caches shard
+  on the slot/batch axis (and sequence over "model" when divisible), and
+  `step_fn` is jitted with explicit in/out shardings so GSPMD emits exactly
+  the column-parallel psum the replaced matmul would need. The host-side
+  scheduler is unchanged — sharding is a construction-time concern only.
 """
 
 from __future__ import annotations
@@ -43,6 +52,8 @@ from typing import Any, Iterator
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ModelBundle
 from repro.serving.sampling import GREEDY, SamplingParams, batch_arrays, sample_tokens
@@ -89,9 +100,14 @@ def warm_lut_autotune(
     Uses the analytic roofline model off-accelerator (fast: pure python),
     real wall-clock on TPU is wired by the benchmarks. Returns the number of
     (site, N) shapes tuned; winners persist in the autotune JSON cache.
+    Shapes that already have a cached winner — e.g. restored from a
+    LUTArtifact's autotune snapshot, possibly wall-clock-measured on real
+    hardware — are left untouched rather than re-derived analytically.
     """
     from repro.kernels import autotune
 
+    backend = jax.default_backend()
+    cache = autotune.get_cache()
     tuned = set()
     for site in iter_lut_kernel_sites(bundle.cfg):
         lut = site.lut
@@ -99,6 +115,8 @@ def warm_lut_autotune(
         for n in token_counts:
             key = ("lut_amm", n, site.d_out, c, lut.k, lut.v)
             if key in tuned:
+                continue
+            if cache.get(autotune.shape_key(*key, dtype, backend)) is not None:
                 continue
             autotune.tune(*key, dtype=dtype, save=False)
             tuned.add(key)
@@ -139,6 +157,8 @@ class ServingEngine:
         prefill_chunk: int = 32,
         compute_dtype=jnp.float32,
         autotune_lut: bool = True,
+        mesh: Mesh | None = None,
+        rules: Any | None = None,
     ):
         if not 1 <= prefill_chunk <= max_seq:
             raise ValueError(
@@ -150,6 +170,14 @@ class ServingEngine:
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        if rules is not None and mesh is None:
+            mesh = rules.mesh
+        if mesh is not None and rules is None:
+            from repro.distributed.sharding import ShardingRules
+
+            rules = ShardingRules(mesh)
+        self.mesh = mesh
+        self.rules = rules
         # the engine only ever issues two token shapes — (n_slots, 1) decode
         # and (n_slots, prefill_chunk) chunked prefill — so the LUT warm-up
         # is exactly those two N values, no ladder needed (DESIGN.md §3.3).
@@ -162,6 +190,18 @@ class ServingEngine:
         else:
             self.n_lut_shapes_tuned = 0
         self.caches = bundle.init_caches(n_slots, max_seq, dtype=compute_dtype)
+        if rules is not None:
+            # place model state once at construction (DESIGN.md §6.4):
+            # tables column-sharded / codebooks replicated per param_spec,
+            # caches sharded on the slot axis (+ sequence over "model")
+            self._param_shardings = rules.params_shardings(
+                jax.eval_shape(lambda: params)
+            )
+            self.params = jax.device_put(params, self._param_shardings)
+            self._cache_shardings = rules.cache_shardings(
+                jax.eval_shape(lambda: self.caches), n_slots
+            )
+            self.caches = jax.device_put(self.caches, self._cache_shardings)
         self.cache_len = np.zeros((n_slots,), np.int32)
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
@@ -190,7 +230,21 @@ class ServingEngine:
 
         # one jitted row-masked forward serves both phases; the two token
         # shapes (chunk vs 1) are its only two compile-cache entries
-        self._step_fn = jax.jit(step_fn)
+        if rules is not None:
+            # explicit in/out shardings: token rows ride the slot axis, and
+            # the caches keep their construction-time layout across steps so
+            # GSPMD never re-shards state between forwards
+            row = NamedSharding(mesh, P(rules.batch_dim(n_slots)))
+            tok = NamedSharding(mesh, P(rules.batch_dim(n_slots), None))
+            logits_sh = NamedSharding(mesh, P(rules.batch_dim(n_slots), None, None))
+            self._step_fn = jax.jit(
+                step_fn,
+                in_shardings=(self._param_shardings, tok, row,
+                              self._cache_shardings, row),
+                out_shardings=(logits_sh, self._cache_shardings),
+            )
+        else:
+            self._step_fn = jax.jit(step_fn)
 
     # ------------------------------------------------------------------
     def reset_stats(self) -> None:
@@ -221,6 +275,24 @@ class ServingEngine:
         return c
 
     # ------------------------------------------------------------------
+    def warmup(self) -> None:
+        """Run (and discard) one throwaway request that compiles both engine
+        token shapes — (n_slots, prefill_chunk) and (n_slots, 1) — off the
+        clock, then re-arm the stats counters.
+
+        The probe prompt is longer than one chunk when the cache allows so
+        the multi-chunk prefill path warms, and short enough that submit()'s
+        max_tokens cap still leaves a decode forward (max_tokens=2 must
+        survive, or the decode shape would compile inside the timed region).
+        """
+        wlen = (self.prefill_chunk + 1
+                if 2 * self.prefill_chunk <= self.max_seq
+                else min(self.prefill_chunk, self.max_seq - 1))
+        self.submit(list(range(1, wlen + 1)), max_tokens=2)
+        self.run_until_done()
+        self.finished.clear()
+        self.reset_stats()
+
     def submit(
         self,
         prompt: list[int],

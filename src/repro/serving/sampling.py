@@ -40,6 +40,10 @@ class SamplingParams:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        # seeds ride an int32 array through batch_arrays; fold oversized
+        # values (e.g. time_ns()) here instead of overflowing mid-step
+        if not -(2**31) <= self.seed < 2**31:
+            object.__setattr__(self, "seed", self.seed & 0x7FFFFFFF)
 
     @property
     def greedy(self) -> bool:

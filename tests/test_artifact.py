@@ -1,0 +1,231 @@
+"""Deployment artifacts (DESIGN.md §8): dtype-exact round trip,
+self-describing load (no `like` tree), autotune snapshot restore, and the
+full train -> deploy -> serve lifecycle through the launchers."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import arch_from_dict, arch_to_dict, build_model, get_arch, reduce_arch
+from repro.core import convert
+from repro.core.amm import Mode
+from repro.kernels import autotune
+from repro.serving.artifact import load_artifact, restore_autotune_snapshot, save_artifact
+from repro.serving.engine import ServingEngine
+
+
+def _deployed_bundle(key, **reduce_kw):
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, **reduce_kw)
+    bundle = build_model(arch, Mode.LUT_INFER)
+    return bundle, bundle.init(key)
+
+
+def _greedy(bundle, params, prompts, n_tokens, **eng_kw):
+    eng = ServingEngine(bundle, params, n_slots=2, max_seq=32, prefill_chunk=4,
+                        autotune_lut=False, **eng_kw)
+    for p in prompts:
+        eng.submit(p, max_tokens=n_tokens)
+    return [r.out_tokens for r in sorted(eng.run_until_done(), key=lambda r: r.rid)]
+
+
+def test_arch_spec_dict_roundtrip():
+    arch = reduce_arch(get_arch("qwen2_vl_7b"))          # has mrope tuple field
+    d = arch_to_dict(arch)
+    assert isinstance(d["mrope_sections"], list)          # JSON-safe
+    back = arch_from_dict(json.loads(json.dumps(d)))
+    assert back == arch
+    # unknown keys from a newer writer are ignored
+    assert arch_from_dict({**d, "future_field": 1}) == arch
+    with pytest.raises(ValueError):
+        arch_from_dict({"name": "x"})                     # required fields missing
+
+
+def test_artifact_roundtrip_exact_dtypes(key, tmp_path):
+    """int8 tables and fp32 scales/centroids survive save->load bit-exactly."""
+    bundle, params = _deployed_bundle(key)
+    save_artifact(tmp_path / "art", bundle, params)
+    art = load_artifact(tmp_path / "art")
+
+    leaves_in = jax.tree_util.tree_leaves(params)
+    leaves_out = jax.tree_util.tree_leaves(art.params)
+    assert len(leaves_in) == len(leaves_out)
+    for a, b in zip(leaves_in, leaves_out):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the deployed tree really exercises both dtypes
+    dtypes = {str(l.dtype) for l in leaves_in}
+    assert "int8" in dtypes and "float32" in dtypes
+
+    m = art.manifest
+    assert m["format"] == "lut-artifact" and m["version"] == 1
+    assert m["mode"] == "lut_infer" and m["kind"] == "lm"
+    assert any(v["dtype"] == "int8" for v in m["leaves"].values())
+
+
+def test_artifact_bfloat16_params_roundtrip(key, tmp_path):
+    """bfloat16 param trees (the giants' param_dtype) survive the npz detour
+    bit-exactly — npz itself cannot store bf16, so leaves travel as uint16."""
+    import jax.numpy as jnp
+
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=1, d_model=32,
+                       vocab=64, d_ff=64, param_dtype="bfloat16")
+    bundle = build_model(arch, Mode.DENSE)
+    params = bundle.init(key)
+    assert any(l.dtype == jnp.bfloat16 for l in jax.tree_util.tree_leaves(params))
+    save_artifact(tmp_path / "art", bundle, params)
+    art = load_artifact(tmp_path / "art")
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(art.params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint16), np.asarray(b).view(np.uint16)
+        )
+
+
+def test_artifact_load_needs_no_like_tree(key, tmp_path):
+    """load_artifact rebuilds arch+bundle+tree purely from the manifest."""
+    bundle, params = _deployed_bundle(key)
+    save_artifact(tmp_path / "art", bundle, params)
+    art = load_artifact(tmp_path / "art")
+    assert art.bundle.arch == bundle.arch
+    assert art.bundle.mode == Mode.LUT_INFER
+    assert art.arch_name == "qwen3_1p7b"
+
+
+def test_artifact_rejects_corruption(key, tmp_path):
+    bundle, params = _deployed_bundle(key)
+    d = save_artifact(tmp_path / "art", bundle, params)
+
+    with pytest.raises(FileNotFoundError):
+        load_artifact(tmp_path / "nope")
+
+    manifest = json.loads((d / "manifest.json").read_text())
+    bad = dict(manifest, version=99)
+    (d / "manifest.json").write_text(json.dumps(bad))
+    with pytest.raises(ValueError, match="version"):
+        load_artifact(d)
+
+    # a manifest whose arch no longer matches the stored arrays must fail
+    # loudly at load (leaf shape validation), not serve garbage
+    bad = dict(manifest)
+    bad["arch"] = dict(bad["arch"], d_model=bad["arch"]["d_model"] * 2)
+    (d / "manifest.json").write_text(json.dumps(bad))
+    with pytest.raises(ValueError):
+        load_artifact(d)
+
+
+def test_artifact_overwrite_in_place(key, tmp_path):
+    """Re-deploying to the same directory replaces the artifact atomically:
+    the new params load, and no .old/.tmp residue is left behind."""
+    bundle, params = _deployed_bundle(key)
+    save_artifact(tmp_path / "art", bundle, params)
+    params2 = bundle.init(jax.random.PRNGKey(1))
+    save_artifact(tmp_path / "art", bundle, params2)
+    art = load_artifact(tmp_path / "art")
+    for a, b in zip(jax.tree_util.tree_leaves(params2),
+                    jax.tree_util.tree_leaves(art.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not (tmp_path / "art.old").exists()
+    assert not (tmp_path / "art.tmp").exists()
+
+
+def test_artifact_serve_parity_in_memory_vs_loaded(key, tmp_path):
+    """save -> load -> serve is token-identical to serving the in-memory
+    deployed params (greedy)."""
+    bundle, params = _deployed_bundle(key)
+    save_artifact(tmp_path / "art", bundle, params)
+    art = load_artifact(tmp_path / "art")
+    prompts = [[1, 2, 3, 4, 5], [7, 8, 9]]
+    assert _greedy(bundle, params, prompts, 5) == \
+        _greedy(art.bundle, art.params, prompts, 5)
+
+
+def test_artifact_autotune_snapshot_restores(key, tmp_path, monkeypatch):
+    """Winners warmed before save ship with the artifact (scoped to THIS
+    bundle's LUT sites) and are merged into a fresh process cache on load
+    (existing entries win)."""
+    bundle, params = _deployed_bundle(key, lut_use_kernel=True)
+    # (m=128, c=8, k=16, v=16) is the reduced qwen3 attention-site signature;
+    # tune it plus a shape belonging to no site — only the former may ship
+    shape = ("lut_amm", 8, 128, 8, 16, 16)
+    autotune.tune(*shape, dtype="float32", backend="cpu")
+    autotune.tune("lut_amm", 8, 999, 3, 16, 8, dtype="float32", backend="cpu")
+    key_str = autotune.shape_key(*shape, "float32", "cpu")
+    foreign = autotune.shape_key("lut_amm", 8, 999, 3, 16, 8, "float32", "cpu")
+    d = save_artifact(tmp_path / "art", bundle, params)
+    snap = json.loads((d / "autotune.json").read_text())
+    assert key_str in snap["entries"]
+    assert foreign not in snap["entries"]
+
+    # fresh cache (new path): loading the artifact merges the winner in
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "fresh.json"))
+    assert autotune.get_cache().get(key_str) is None
+    load_artifact(d)
+    assert autotune.get_cache().get(key_str) is not None
+
+    # existing entries are NOT clobbered by a second restore
+    autotune.get_cache().put(key_str, {"block_n": 1, "block_m": 1, "block_c": 1})
+    assert restore_autotune_snapshot(d) == 0 or \
+        autotune.get_cache().get(key_str)["block_n"] == 1
+
+
+def test_deploy_to_artifact_emits_loadable_artifact(key, tmp_path):
+    """convert.deploy_to_artifact: LUT_TRAIN params -> artifact on disk whose
+    loaded params equal the returned in-memory deployed tree."""
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, d_model=64,
+                       vocab=64, d_ff=128)
+    blut = build_model(arch, Mode.LUT_TRAIN)
+    lparams = blut.init(key)
+    binf, iparams = convert.deploy_to_artifact(blut, lparams, tmp_path / "art")
+    art = load_artifact(tmp_path / "art")
+    for a, b in zip(jax.tree_util.tree_leaves(iparams),
+                    jax.tree_util.tree_leaves(art.params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert art.bundle.arch == binf.arch
+
+
+def test_e2e_train_writes_artifact_serve_loads_it(tmp_path, capsys, monkeypatch):
+    """The acceptance lifecycle: launch/train.py --lut (reduced) writes a
+    LUTArtifact; launch/serve.py --artifact loads it with no hand-built
+    `like` tree and serves it, token-identical to the in-memory deployed
+    params the pipeline produced."""
+    from repro.launch.serve import main as serve_main
+    from repro.launch.train import main as train_main
+
+    # capture the pipeline's in-memory deployed (bundle, params) as they
+    # flow through the deploy step, for the parity check below
+    captured = {}
+    orig_deploy = convert.deploy_to_artifact
+
+    def spy(blut, lparams, directory):
+        binf, iparams = orig_deploy(blut, lparams, directory)
+        captured["bundle"], captured["params"] = binf, iparams
+        return binf, iparams
+
+    monkeypatch.setattr(convert, "deploy_to_artifact", spy)
+
+    art_dir = tmp_path / "deployed"
+    train_main([
+        "--arch", "qwen3_1p7b", "--d-model", "32", "--layers", "2",
+        "--vocab", "64", "--seq", "16", "--batch", "4", "--steps", "2",
+        "--lut", "--ckpt-dir", str(tmp_path / "ckpt"),
+        "--artifact-dir", str(art_dir),
+    ])
+    assert (art_dir / "manifest.json").exists()
+    assert (art_dir / "arrays.npz").exists()
+
+    serve_main([
+        "--artifact", str(art_dir), "--requests", "2", "--slots", "2",
+        "--max-seq", "32", "--max-tokens", "4", "--prefill-chunk", "4",
+    ])
+    out = capsys.readouterr().out
+    assert "artifact" in out and "2 requests" in out
+
+    # greedy outputs from the loaded artifact == serving the in-memory tree
+    art = load_artifact(art_dir)
+    prompts = [[1, 2, 3], [5, 6, 7, 8]]
+    assert _greedy(art.bundle, art.params, prompts, 4) == \
+        _greedy(captured["bundle"], captured["params"], prompts, 4)

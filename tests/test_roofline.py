@@ -49,7 +49,8 @@ def test_real_compiled_module_collectives():
             import jax, jax.numpy as jnp
             from jax.sharding import PartitionSpec as P, NamedSharding
             from repro.roofline.analysis import analyze_compiled
-            mesh = jax.make_mesh((4,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((4,), ("model",))
             def f(x, w):
                 return x @ w          # contraction dim sharded -> psum
             xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)

@@ -1,0 +1,111 @@
+"""Mesh-sharded ServingEngine (DESIGN.md §6.4), under forced host devices:
+params land on `distributed.sharding`'s specs (table_q column-sharded over
+"model"), caches shard on the slot axis, and decode output is token-identical
+to the unsharded engine — including when the params come from a LUTArtifact."""
+
+import textwrap
+
+from tests._subproc import run_with_devices
+
+
+def test_sharded_engine_matches_unsharded_tp2():
+    out = run_with_devices(
+        textwrap.dedent(
+            """
+            import jax
+            from repro.configs import build_model, get_arch, reduce_arch
+            from repro.core.amm import Mode
+            from repro.launch.mesh import make_host_mesh
+            from repro.serving.engine import ServingEngine
+
+            arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2)
+            bundle = build_model(arch, Mode.LUT_INFER)
+            params = bundle.init(jax.random.PRNGKey(0))
+
+            ref = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                                prefill_chunk=4, autotune_lut=False)
+            mesh = make_host_mesh(data=1, model=2)
+            assert mesh.shape["model"] == 2
+            eng = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                                prefill_chunk=4, autotune_lut=False, mesh=mesh)
+
+            from repro.checkpoint.checkpointer import tree_paths
+
+            def paths(tree):
+                return dict(zip(tree_paths(tree),
+                                jax.tree_util.tree_leaves(tree)))
+
+            # every param leaf carries exactly the spec sharding.py assigns;
+            # column-parallel LUT sites are M-sharded over "model"
+            tq = [(p, l) for p, l in paths(eng.params).items()
+                  if p.endswith("table_q")]
+            assert tq
+            n_col = 0
+            for p, l in tq:
+                spec = l.sharding.spec
+                assert spec == eng.rules.param_spec(p, l.shape), (p, spec)
+                n_col += spec[-1] == "model"
+            assert n_col > 0, "no table_q leaf column-sharded over model"
+            # scales/centroids of column-parallel sites stay replicated
+            for p, l in paths(eng.params).items():
+                if p.endswith("table_scale"):
+                    assert all(s is None for s in l.sharding.spec), (p, l.sharding)
+
+            # KV caches shard on the slot/batch axis (dim 1 of (L,B,S,KV,Dh))
+            for p, l in paths(eng.caches).items():
+                assert l.sharding.spec[1] == "data", (p, l.sharding.spec)
+
+            # decode parity: chunked prefill + decode, multiple slots
+            for e in (ref, eng):
+                e.submit([1, 2, 3, 4, 5, 6, 7], max_tokens=6)
+                e.submit([9, 8, 7], max_tokens=6)
+            o_ref = [r.out_tokens for r in
+                     sorted(ref.run_until_done(), key=lambda r: r.rid)]
+            o_tp = [r.out_tokens for r in
+                    sorted(eng.run_until_done(), key=lambda r: r.rid)]
+            assert o_ref == o_tp, (o_ref, o_tp)
+            print("SHARDED_ENGINE_OK")
+            """
+        ),
+        n_devices=2,
+    )
+    assert "SHARDED_ENGINE_OK" in out
+
+
+def test_artifact_to_sharded_engine_tp2(tmp_path):
+    """The full deploy hand-off onto a mesh: artifact saved single-device,
+    loaded in a 2-device process, served tensor-parallel — same tokens."""
+    out = run_with_devices(
+        textwrap.dedent(
+            f"""
+            import jax
+            from repro.configs import build_model, get_arch, reduce_arch
+            from repro.core.amm import Mode
+            from repro.launch.mesh import make_host_mesh
+            from repro.serving.artifact import load_artifact, save_artifact
+            from repro.serving.engine import ServingEngine
+
+            arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2)
+            bundle = build_model(arch, Mode.LUT_INFER)
+            params = bundle.init(jax.random.PRNGKey(0))
+            save_artifact({str(tmp_path)!r} + "/art", bundle, params)
+            art = load_artifact({str(tmp_path)!r} + "/art")
+
+            mesh = make_host_mesh(data=1, model=2)
+            engines = [
+                ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                              prefill_chunk=4, autotune_lut=False),
+                ServingEngine(art.bundle, art.params, n_slots=2, max_seq=32,
+                              prefill_chunk=4, autotune_lut=False, mesh=mesh),
+            ]
+            outs = []
+            for e in engines:
+                e.submit([1, 2, 3, 4, 5], max_tokens=5)
+                outs.append([r.out_tokens for r in e.run_until_done()])
+            assert outs[0] == outs[1], outs
+            print("ARTIFACT_TP_OK")
+            """
+        ),
+        n_devices=2,
+    )
+    assert "ARTIFACT_TP_OK" in out

@@ -16,6 +16,7 @@ def test_sharded_train_matches_single_device():
             from repro.core.amm import Mode
             from repro.data import MarkovLM
             from repro.distributed.sharding import ShardingRules
+            from repro.launch.mesh import make_mesh
             from repro.optim import AdamW
             from repro.train.train_step import make_train_step
 
@@ -31,8 +32,7 @@ def test_sharded_train_matches_single_device():
             # single-device reference
             p_ref, _, m_ref = jax.jit(step)(params, ostate, batch)
 
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = make_mesh((2, 4), ("data", "model"))
             rules = ShardingRules(mesh)
             ps = rules.params_shardings(jax.eval_shape(lambda: params))
             os_ = rules.opt_shardings(jax.eval_shape(lambda: ostate))
@@ -69,8 +69,8 @@ def test_reduced_dryrun_lut_modes():
             from repro.roofline.analysis import analyze_compiled
 
             arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, vocab=64)
-            mesh = jax.make_mesh((2, 4), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((2, 4), ("data", "model"))
             rules = ShardingRules(mesh)
 
             bundle = build_model(arch, Mode.LUT_TRAIN)
@@ -117,7 +117,8 @@ def test_grad_compression_matches_exact():
             """
             import jax, jax.numpy as jnp
             from repro.train.grad_compression import make_compressed_grad_fn, init_residual
-            mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((8,), ("data",))
             def loss_fn(params, batch):
                 return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
             key = jax.random.PRNGKey(0)
