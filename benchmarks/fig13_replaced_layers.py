@@ -1,52 +1,101 @@
-"""Paper Fig. 13: BERT accuracy vs number of replaced (last-n) layers.
+"""Paper Fig. 13 as a LUTPlan sweep: accuracy/latency vs replacement plan.
 
 Uses the real bert_base config (reduced width for CPU) on the Markov LM
-task: replace the FC operators of the last n layers, soft-PQ fine-tune,
-report eval loss. The paper's observation: the FRONT layers are
-accuracy-critical; replacing only the back layers is nearly free.
+task. Each row is a `LUTPlan` — the last-n sweep reproduces the paper's
+observation that the FRONT layers are accuracy-critical, and the
+heterogeneous row exercises what the old `lut_policy` string could not
+express: per-site-kind K (MLP sites K=16, attention sites K=8) with the
+first and last layers kept dense.
+
+Every plan goes through the full lifecycle (convert -> soft-PQ fine-tune
+-> int8 deploy), and reports:
+
+  eval_loss       soft-PQ (LUT_TRAIN) eval loss
+  deployed_loss   eval loss of the deployed int8-table model
+  infer_us        wall-clock of one jitted deployed forward (8x24 batch)
+
+With `json_path` set (benchmarks/run.py --json) the rows land in
+BENCH_plans.json so future PRs have a replaced-layer accuracy/latency
+trajectory to regress against.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import build_model, get_arch, reduce_arch
+from repro.configs import PAPER_DEFAULT, LUTPlan, SitePolicy, build_model, get_arch, reduce_arch, rule
 from repro.core import convert
 from repro.core.amm import Mode
 from repro.data import MarkovLM
 from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
 from repro.train.train_step import make_train_step
 
+N_LAYERS = 6
 
-def main(steps: int = 120) -> None:
+
+def _plans() -> list[tuple[str, LUTPlan | None]]:
+    rows: list[tuple[str, LUTPlan | None]] = [("dense", None)]
+    rows += [(f"last_n:{n}", LUTPlan.last_n(n, v=16)) for n in (2, 4, 6)]
+    rows.append((
+        "hetero_mlp16_attn8_ends_dense",
+        LUTPlan(
+            rules=(
+                rule(kinds=("mlp/*",), k=16),
+                rule(kinds=("attn/*",), k=8),
+                rule(layers="set", layer_set=(0, N_LAYERS - 1), replace=False),
+            ),
+            default=SitePolicy(v=16).merged_over(PAPER_DEFAULT),
+        ),
+    ))
+    return rows
+
+
+def _timed_loss(bundle, params, batch, iters: int = 5) -> tuple[float, float]:
+    fn = jax.jit(lambda p, b: bundle.loss(p, b, compute_dtype=jnp.float32))
+    loss = float(jax.block_until_ready(fn(params, batch)))       # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(params, batch))
+    return loss, (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(steps: int = 120, json_path: str | pathlib.Path | None = None) -> list[dict]:
     t0 = time.time()
     key = jax.random.PRNGKey(0)
-    base = reduce_arch(get_arch("bert_base"), n_layers=6, vocab=64, d_model=64, d_ff=128,
-                       causal=True)     # causal LM task carrier
+    base = reduce_arch(get_arch("bert_base"), n_layers=N_LAYERS, vocab=64,
+                       d_model=64, d_ff=128, causal=True)   # causal LM task carrier
     data = MarkovLM(vocab=base.vocab, seq_len=24, batch=8)
 
-    dense = build_model(dataclasses.replace(base, lut_policy="last_n:0"), Mode.DENSE)
+    dense = build_model(dataclasses.replace(base, lut_plan=LUTPlan.none()), Mode.DENSE)
     dparams = dense.init(key)
     opt = AdamW(lr=3e-3)
     step = jax.jit(make_train_step(dense, opt, compute_dtype=jnp.float32))
     ostate = opt.init(dparams)
     for i in range(steps * 2):
         dparams, ostate, m = step(dparams, ostate, data.batch_at(i))
-    base_loss = float(dense.loss(dparams, data.batch_at(9_999), compute_dtype=jnp.float32))
+    eval_batch = data.batch_at(9_999)
+    base_loss, base_us = _timed_loss(dense, dparams, eval_batch)
 
-    print("# Fig. 13 analog: eval loss vs number of replaced (last-n) layers")
-    print(f"n_replaced,eval_loss  (dense baseline {base_loss:.4f})")
+    print("# Fig. 13 analog: eval loss vs replacement plan")
+    print(f"plan,eval_loss,deployed_loss,infer_us  (dense baseline {base_loss:.4f})")
+    plans = _plans()
+    rows = []
     losses = {}
-    for n in (0, 2, 4, 6):
-        if n == 0:
-            losses[n] = base_loss
-            print(f"0,{base_loss:.4f}")
+    for name, plan in plans:
+        if plan is None:
+            losses[name] = base_loss
+            rows.append({"plan": name, "eval_loss": base_loss,
+                         "deployed_loss": base_loss, "infer_us": base_us})
+            print(f"{name},{base_loss:.4f},{base_loss:.4f},{base_us:.0f}")
             continue
-        arch = dataclasses.replace(base, lut_policy=f"last_n:{n}")
+        arch = dataclasses.replace(base, lut_plan=plan)
         dense_n = build_model(arch, Mode.DENSE)
         samples = [data.batch_at(50_000 + i) for i in range(2)]
         blut, lparams = convert.convert_dense_to_lut_train(dense_n, dparams, samples, key)
@@ -56,11 +105,30 @@ def main(steps: int = 120) -> None:
         o2 = opt2.init(lparams, frozen)
         for i in range(steps):
             lparams, o2, _ = step2(lparams, o2, data.batch_at(i))
-        losses[n] = float(blut.loss(lparams, data.batch_at(9_999), compute_dtype=jnp.float32))
-        print(f"{n},{losses[n]:.4f}")
-    print(f"claim_back_layers_cheap,{losses[2] < losses[6] + 0.5}")
-    print(f"fig13_replaced_layers,{(time.time()-t0)*1e6:.0f},loss_curve")
+        losses[name] = float(blut.loss(lparams, eval_batch, compute_dtype=jnp.float32))
+        binf, iparams = convert.deploy_lut_train_params(blut, lparams)
+        dep_loss, dep_us = _timed_loss(binf, iparams, eval_batch)
+        rows.append({"plan": name, "eval_loss": losses[name],
+                     "deployed_loss": dep_loss, "infer_us": dep_us})
+        print(f"{name},{losses[name]:.4f},{dep_loss:.4f},{dep_us:.0f}")
+    print(f"claim_back_layers_cheap,{losses['last_n:2'] < losses['last_n:6'] + 0.5}")
+
+    if json_path is not None:
+        payload = {
+            "benchmark": "fig13_replaced_layers",
+            "arch": "bert_base (reduced)",
+            "n_layers": N_LAYERS,
+            "steps": steps,
+            "plans": {name: (plan.to_dict() if plan is not None else None)
+                      for name, plan in plans},
+            "rows": rows,
+        }
+        pathlib.Path(json_path).write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {json_path}")
+    print(f"fig13_replaced_layers,{(time.time()-t0)*1e6:.0f},plan_sweep")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    _JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_plans.json"
+    main(json_path=_JSON if "--json" in sys.argv else None)

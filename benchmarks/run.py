@@ -38,6 +38,7 @@ _ROOT = pathlib.Path(__file__).resolve().parents[1]
 JSON_ARTIFACTS = {
     "op_microbench": _ROOT / "BENCH_kernels.json",
     "serving_bench": _ROOT / "BENCH_serving.json",
+    "fig13_replaced_layers": _ROOT / "BENCH_plans.json",
 }
 
 

@@ -1,25 +1,101 @@
 """End-to-end driver (deliverable b): dense pretrain -> convert -> soft-PQ
 QAT fine-tune -> int8 deploy -> eval + LUTArtifact, on a real (reduced)
-registry arch.
+registry arch — wired through a HETEROGENEOUS per-site LUTPlan (DESIGN.md
+§9) instead of the legacy lut_policy string:
+
+  * MLP sites:       K=16 tables
+  * attention sites: K=8 tables (cheaper encode, the paper's K ablation)
+  * first and last layers: kept dense (the paper's accuracy-critical ends)
 
   PYTHONPATH=src python examples/train_softpq_pipeline.py [--steps 200]
 
-This is the same flow `python -m repro.launch.train --lut` runs; kept as a
-standalone script so it can be stepped through. The emitted artifact serves
-with `python -m repro.launch.serve --artifact <dir>` (examples/
-deploy_and_serve.py shows the full loop).
+The emitted artifact (manifest v2, plan included) serves with
+`python -m repro.launch.serve --artifact <dir>` (examples/deploy_and_serve.py
+shows the full loop). For the plain string-policy pipeline use
+`python -m repro.launch.train --lut`.
 """
 
 import argparse
+import dataclasses
 
-from repro.launch.train import main as train_main
+import jax
+import jax.numpy as jnp
 
-if __name__ == "__main__":
+from repro.configs import LUTPlan, build_model, effective_plan, get_arch, reduce_arch, rule
+from repro.core import convert
+from repro.core.amm import Mode
+from repro.data import MarkovLM
+from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
+from repro.optim.schedule import cosine_with_warmup
+from repro.train.train_step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--arch", default="qwen3_1p7b")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--artifact-dir", default="/tmp/repro_plan_artifact")
     args = ap.parse_args()
-    train_main([
-        "--arch", args.arch, "--steps", str(args.steps), "--lut",
-        "--d-model", "256", "--layers", "4",
-    ])
+
+    plan = LUTPlan(rules=(
+        rule(kinds=("mlp/*",), k=16),
+        rule(kinds=("attn/*",), k=8),
+        rule(layers="set", layer_set=(0, args.layers - 1), replace=False),
+    ))
+    arch = reduce_arch(
+        get_arch(args.arch),
+        d_model=256, n_layers=args.layers, vocab=512, d_ff=512,
+    )
+    arch = dataclasses.replace(arch, lut_plan=plan)
+    print(f"replacement plan: {effective_plan(arch).describe()}")
+
+    data = MarkovLM(vocab=arch.vocab, seq_len=64, batch=16)
+    key = jax.random.PRNGKey(0)
+
+    dense = build_model(arch, Mode.DENSE)
+    params = dense.init(key)
+    opt = AdamW(lr=cosine_with_warmup(3e-3, total_steps=args.steps, warmup_steps=20))
+    trainer = Trainer(
+        step_fn=jax.jit(make_train_step(dense, opt, compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=args.steps, ckpt_every=10**9,
+                          ckpt_dir="/tmp/repro_plan_ckpt", log_every=50),
+    )
+    params, _ = trainer.fit(params, opt.init(params), start_step=0)
+    print(f"dense pretrain final loss {trainer.history[-1]['loss']:.4f}")
+
+    print("converting: k-means centroid init from activation samples ...")
+    samples = [data.batch_at(10_000 + i) for i in range(2)]
+    blut, lparams = convert.convert_dense_to_lut_train(dense, params, samples, key)
+
+    # the registry shows how the plan resolved every site
+    print("per-site resolution (layer 1):")
+    for s in blut.sites():
+        if s.layer == 1 and s.stack_index is not None:
+            lut = f"K={s.lut.k} V={s.lut.v}" if s.mode != Mode.DENSE else "dense"
+            print(f"  {s.kind:12s} {s.d_in:4d}->{s.d_out:<4d} {lut}")
+
+    frozen = lut_frozen_mask(lparams)
+    opt2 = AdamW(lr=cosine_with_warmup(1e-3, total_steps=args.steps, warmup_steps=10),
+                 rules=SOFT_PQ_RULES)
+    trainer2 = Trainer(
+        step_fn=jax.jit(make_train_step(blut, opt2, frozen_mask=frozen,
+                                        compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=args.steps, ckpt_every=10**9,
+                          ckpt_dir="/tmp/repro_plan_ckpt_lut", log_every=50),
+    )
+    lparams, _ = trainer2.fit(lparams, opt2.init(lparams, frozen), start_step=0)
+    print(f"soft-PQ fine-tune final loss {trainer2.history[-1]['loss']:.4f}")
+
+    binf, iparams = convert.deploy_to_artifact(blut, lparams, args.artifact_dir)
+    eval_loss = binf.loss(iparams, data.batch_at(99_999), compute_dtype=jnp.float32)
+    print(f"deployed INT8 LUT eval loss: {float(eval_loss):.4f}")
+    print(f"wrote LUTArtifact (manifest v2 + plan) to {args.artifact_dir} "
+          f"(serve: python -m repro.launch.serve --artifact {args.artifact_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.amm import LUTConfig, Mode
+from repro.core.plan import (  # noqa: F401  (re-exported: the plan API surface)
+    PAPER_DEFAULT,
+    LUTPlan,
+    PlanRule,
+    SitePolicy,
+    SiteSelector,
+    SiteSpec,
+    rule,
+)
 from repro.models import attention as attn_mod
 from repro.models import encdec as encdec_mod
 from repro.models import hybrid as hybrid_mod
@@ -77,6 +86,11 @@ class ArchSpec:
     lut_int8_dot: bool = False          # integer one-hot contraction (section Perf)
     lut_use_kernel: bool = False        # fused Pallas v2 kernel at LUT sites (DESIGN.md §2.3)
     lut_policy: str = "all_but_first"   # or "last_n:<n>" (BERT, Fig. 13), "all"
+    # First-class per-site plan (DESIGN.md §9). When set it SUBSUMES
+    # lut_policy and the flat lut_* flags above; when None those legacy
+    # fields are parsed into an equivalent single-rule plan (the shim), so
+    # old configs/checkpoints/artifacts keep building identical models.
+    lut_plan: LUTPlan | None = None
     # scale/precision policy for the production dry-run
     param_dtype: str = "float32"        # giants use bfloat16 (DESIGN.md section 5)
     kv_cache_dtype: str = "bfloat16"    # "float8_e4m3fn" halves decode cache reads
@@ -134,10 +148,12 @@ def get_arch(name: str) -> ArchSpec:
 
 def arch_to_dict(arch: ArchSpec) -> dict[str, Any]:
     """JSON-safe dict of every ArchSpec field (tuples become lists)."""
-    out = dataclasses.asdict(arch)
+    out = dataclasses.asdict(dataclasses.replace(arch, lut_plan=None))
     for k, v in out.items():
         if isinstance(v, tuple):
             out[k] = list(v)
+    # the plan serializes through its own schema, not dataclasses.asdict
+    out["lut_plan"] = arch.lut_plan.to_dict() if arch.lut_plan is not None else None
     return out
 
 
@@ -151,6 +167,9 @@ def arch_from_dict(d: dict[str, Any]) -> ArchSpec:
     kw: dict[str, Any] = {}
     for k, v in d.items():
         if k not in fields:
+            continue
+        if k == "lut_plan":
+            kw[k] = LUTPlan.from_dict(v) if v else None
             continue
         if isinstance(v, list):
             v = tuple(v)
@@ -205,36 +224,105 @@ def reduce_arch(arch: ArchSpec, **overrides: Any) -> ArchSpec:
         small.update(mrope_sections=(4, 6, 6))
     small.update(lut_v=16)
     small.update(overrides)
-    return dataclasses.replace(arch, **small)
+    out = dataclasses.replace(arch, **small)
+    # depth cuts can strand a last_n policy past the new layer count (the
+    # plan resolver validates and would rightly reject it) — clamp
+    if out.lut_plan is not None:
+        clamped = tuple(
+            dataclasses.replace(
+                r, select=dataclasses.replace(
+                    r.select, n=min(r.select.n, out.n_layers),
+                    # out-of-range indices pin to the new last layer (not
+                    # dropped): a "first and last dense" set keeps its intent
+                    layer_set=tuple(sorted({
+                        min(i, out.n_layers - 1) for i in r.select.layer_set
+                    })),
+                )
+            ) if r.select.layers in ("last_n", "set") else r
+            for r in out.lut_plan.rules
+        )
+        out = dataclasses.replace(
+            out, lut_plan=dataclasses.replace(out.lut_plan, rules=clamped)
+        )
+    elif out.lut_policy.startswith("last_n:"):
+        n = int(out.lut_policy.split(":", 1)[1])
+        if n > out.n_layers:
+            out = dataclasses.replace(out, lut_policy=f"last_n:{out.n_layers}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# replacement plan resolution
+# ---------------------------------------------------------------------------
+
+def effective_plan(arch: ArchSpec) -> LUTPlan:
+    """The arch's LUTPlan: `lut_plan` when set, else the back-compat shim
+    parsing `lut_policy` + the flat `lut_*` flags into a single-rule plan."""
+    if arch.lut_plan is not None:
+        return arch.lut_plan
+    return LUTPlan.from_policy_string(
+        arch.lut_policy,
+        default=SitePolicy(
+            k=arch.lut_k, v=arch.lut_v, bits=arch.lut_bits, per_column=False,
+            int8_dot=arch.lut_int8_dot, use_kernel=arch.lut_use_kernel,
+        ),
+    )
 
 
 # ---------------------------------------------------------------------------
 # model assembly
 # ---------------------------------------------------------------------------
 
-def _lut(arch: ArchSpec, d_in: int) -> LUTConfig:
-    v = arch.lut_v
-    while d_in % v:
-        v //= 2
-    return LUTConfig(
-        k=arch.lut_k, v=v, bits=arch.lut_bits,
-        int8_dot=arch.lut_int8_dot, use_kernel=arch.lut_use_kernel,
-    )
+class _PlanResolver:
+    """Resolves every linear site of one build to (mode, LUTConfig).
+
+    A site resolves to `mode` (the bundle's LUT_TRAIN/LUT_INFER) iff the
+    plan replaces its (layer, kind); otherwise it stays DENSE. Dense sites
+    still carry the plan-default LUTConfig as metadata (roofline/bench
+    tooling reads it; params never depend on it). `layer=None` marks
+    weight-shared / uniformly-stacked sites (hybrid, enc-dec), which layer
+    selectors treat as matching.
+    """
+
+    def __init__(self, arch: ArchSpec, mode: Mode):
+        self.arch = arch
+        self.mode = mode
+        self.plan = effective_plan(arch).validate(arch.n_layers)
+
+    def _resolve(self, layer: int | None, kind: str, d_in: int,
+                 lut_site: bool) -> tuple[Mode, LUTConfig]:
+        cfg = None
+        if lut_site and self.mode != Mode.DENSE:
+            cfg = self.plan.lut_config(layer, kind, d_in, self.arch.n_layers)
+        if cfg is None:
+            return Mode.DENSE, self.plan.default.lut_config(d_in)
+        return self.mode, cfg
+
+    def site(self, d_in: int, d_out: int, kind: str, *,
+             layer: int | None = None, lut_site: bool = True) -> SiteCfg:
+        mode, cfg = self._resolve(layer, kind, d_in, lut_site)
+        return SiteCfg(d_in=d_in, d_out=d_out, mode=mode, lut=cfg,
+                       bias=self.arch.use_bias, name=kind)
+
+    def expert_site(self, d_in: int, d_out: int, kind: str,
+                    *, layer: int | None = None) -> moe_mod.ExpertSiteCfg:
+        mode, cfg = self._resolve(layer, kind, d_in, lut_site=True)
+        return moe_mod.ExpertSiteCfg(
+            n_experts=self.arch.n_experts, d_in=d_in, d_out=d_out,
+            mode=mode, lut=cfg,
+        )
 
 
-def _site(arch: ArchSpec, d_in: int, d_out: int, mode: Mode, name: str = "") -> SiteCfg:
-    return SiteCfg(d_in=d_in, d_out=d_out, mode=mode, lut=_lut(arch, d_in),
-                   bias=arch.use_bias, name=name)
-
-
-def _attn_cfg(arch: ArchSpec, mode: Mode, *, causal=None, cross=False) -> attn_mod.AttnCfg:
+def _attn_cfg(res: _PlanResolver, *, layer: int | None = None, causal=None,
+              cross=False, prefix: str = "attn") -> attn_mod.AttnCfg:
+    arch = res.arch
     d, h, kv, dh = arch.d_model, arch.n_heads, arch.n_kv_heads, arch.d_head
     return attn_mod.AttnCfg(
         d_model=d, n_heads=h, n_kv_heads=kv, d_head=dh,
-        q=_site(arch, d, h * dh, mode, "attn/q"),
-        k=_site(arch, d, kv * dh, mode, "attn/k"),
-        v=_site(arch, d, kv * dh, mode, "attn/v"),
-        o=_site(arch, h * dh, d, mode, "attn/o"),
+        q=res.site(d, h * dh, f"{prefix}/q", layer=layer),
+        k=res.site(d, kv * dh, f"{prefix}/k", layer=layer),
+        v=res.site(d, kv * dh, f"{prefix}/v", layer=layer),
+        o=res.site(h * dh, d, f"{prefix}/o", layer=layer),
         qk_norm=arch.qk_norm,
         rope_theta=arch.rope_theta,
         mrope_sections=arch.mrope_sections,
@@ -243,78 +331,137 @@ def _attn_cfg(arch: ArchSpec, mode: Mode, *, causal=None, cross=False) -> attn_m
     )
 
 
-def _mlp_cfg(arch: ArchSpec, mode: Mode) -> mlp_mod.MLPCfg:
+def _mlp_cfg(res: _PlanResolver, *, layer: int | None = None,
+             prefix: str = "mlp") -> mlp_mod.MLPCfg:
+    arch = res.arch
     d, f = arch.d_model, arch.d_ff
     return mlp_mod.MLPCfg(
         d_model=d, d_ff=f,
-        gate=_site(arch, d, f, mode, "mlp/gate"),
-        up=_site(arch, d, f, mode, "mlp/up"),
-        down=_site(arch, f, d, mode, "mlp/down"),
+        gate=res.site(d, f, f"{prefix}/gate", layer=layer),
+        up=res.site(d, f, f"{prefix}/up", layer=layer),
+        down=res.site(f, d, f"{prefix}/down", layer=layer),
         act=arch.act,
         gated=arch.mlp_gated,
     )
 
 
-def _moe_cfg(arch: ArchSpec, mode: Mode) -> moe_mod.MoECfg:
+def _moe_cfg(res: _PlanResolver, *, layer: int | None = None) -> moe_mod.MoECfg:
+    arch = res.arch
     d, f, e = arch.d_model, arch.d_ff, arch.n_experts
-
-    def esite(d_in, d_out):
-        return moe_mod.ExpertSiteCfg(
-            n_experts=e, d_in=d_in, d_out=d_out, mode=mode, lut=_lut(arch, d_in)
-        )
-
     return moe_mod.MoECfg(
         d_model=d, d_ff=f, n_experts=e, top_k=arch.top_k,
-        router=_site(arch, d, e, Mode.DENSE),        # router stays exact
-        gate=esite(d, f), up=esite(d, f), down=esite(f, d),
-        shared=_mlp_cfg(arch, mode) if arch.moe_shared_expert else None,
+        # the router stays exact: approximated routing logits destabilize
+        # top-k selection (DESIGN.md §4)
+        router=res.site(d, e, "moe/router", layer=layer, lut_site=False),
+        gate=res.expert_site(d, f, "moe/gate", layer=layer),
+        up=res.expert_site(d, f, "moe/up", layer=layer),
+        down=res.expert_site(f, d, "moe/down", layer=layer),
+        shared=(_mlp_cfg(res, layer=layer, prefix="moe/shared")
+                if arch.moe_shared_expert else None),
         act=arch.act,
         group_tokens=arch.moe_group_tokens,
     )
 
 
-def _mamba_block(arch: ArchSpec, mode: Mode) -> tf_mod.BlockCfg:
+def _mamba_block(res: _PlanResolver, *, layer: int | None = None) -> tf_mod.BlockCfg:
+    arch = res.arch
     di = arch.d_inner
     h = di // arch.ssm_head_dim
     mcfg = mamba_mod.Mamba2Cfg(
         d_model=arch.d_model, d_inner=di, n_heads=h, head_dim=arch.ssm_head_dim,
         ssm_state=arch.ssm_state, n_groups=arch.ssm_groups,
         conv_width=arch.conv_width, chunk=arch.ssd_chunk,
-        in_proj=_site(arch, arch.d_model,
-                      2 * di + 2 * arch.ssm_groups * arch.ssm_state + h, mode,
-                      "mamba/in_proj"),
-        out_proj=_site(arch, di, arch.d_model, mode, "mamba/out_proj"),
+        in_proj=res.site(arch.d_model,
+                         2 * di + 2 * arch.ssm_groups * arch.ssm_state + h,
+                         "mamba/in_proj", layer=layer),
+        out_proj=res.site(di, arch.d_model, "mamba/out_proj", layer=layer),
     )
     return tf_mod.BlockCfg(kind="mamba", d_model=arch.d_model, mamba=mcfg)
 
 
-def _block(arch: ArchSpec, mode: Mode) -> tf_mod.BlockCfg:
+def _block(res: _PlanResolver, *, layer: int | None = None) -> tf_mod.BlockCfg:
+    arch = res.arch
     if arch.family == "ssm":
-        return _mamba_block(arch, mode)
+        return _mamba_block(res, layer=layer)
     if arch.family == "moe":
         return tf_mod.BlockCfg(
             kind="moe", d_model=arch.d_model,
-            attn=_attn_cfg(arch, mode),
-            moe=_moe_cfg(arch, mode),
-            residual_mlp=_mlp_cfg(arch, mode) if arch.moe_dense_residual else None,
+            attn=_attn_cfg(res, layer=layer),
+            moe=_moe_cfg(res, layer=layer),
+            residual_mlp=(_mlp_cfg(res, layer=layer, prefix="residual_mlp")
+                          if arch.moe_dense_residual else None),
         )
     return tf_mod.BlockCfg(
         kind="dense", d_model=arch.d_model,
-        attn=_attn_cfg(arch, mode), mlp=_mlp_cfg(arch, mode),
+        attn=_attn_cfg(res, layer=layer), mlp=_mlp_cfg(res, layer=layer),
     )
 
 
-def _segments(arch: ArchSpec, mode: Mode) -> tuple[tuple[int, tf_mod.BlockCfg], ...]:
-    """Apply the paper's replacement policy as uniform-mode layer runs."""
-    L = arch.n_layers
-    if mode == Mode.DENSE or arch.lut_policy == "all":
-        return ((L, _block(arch, mode)),)
-    if arch.lut_policy == "all_but_first":
-        return ((1, _block(arch, Mode.DENSE)), (L - 1, _block(arch, mode)))
-    if arch.lut_policy.startswith("last_n:"):
-        n = int(arch.lut_policy.split(":")[1])
-        return ((L - n, _block(arch, Mode.DENSE)), (n, _block(arch, mode)))
-    raise ValueError(arch.lut_policy)
+def _segments(res: _PlanResolver) -> tuple[tuple[int, tf_mod.BlockCfg], ...]:
+    """Resolve the plan to per-layer blocks, grouped into runs of identical
+    config (jax.lax.scan segments). Non-contiguous and mixed-precision
+    replacement fall out: each change of resolved block config starts a new
+    segment, so e.g. dense/K16/K8/dense builds four scanned runs."""
+    L = res.arch.n_layers
+    if res.mode == Mode.DENSE:
+        return ((L, _block(res)),)
+    segs: list[list[Any]] = []
+    for j in range(L):
+        b = _block(res, layer=j)
+        if segs and segs[-1][1] == b:
+            segs[-1][0] += 1
+        else:
+            segs.append([1, b])
+    return tuple((n, b) for n, b in segs)
+
+
+# ---------------------------------------------------------------------------
+# site registry (DESIGN.md §9.2)
+# ---------------------------------------------------------------------------
+
+def _mlp_site_list(m: mlp_mod.MLPCfg) -> list[tuple[str, Any, bool]]:
+    sites = ([m.gate] if m.gated else []) + [m.up, m.down]
+    return [(s.name, s, True) for s in sites]
+
+
+def _attn_site_list(a: attn_mod.AttnCfg) -> list[tuple[str, Any, bool]]:
+    return [(s.name, s, True) for s in (a.q, a.k, a.v, a.o)]
+
+
+def _block_site_list(bcfg: tf_mod.BlockCfg) -> list[tuple[str, Any, bool]]:
+    """(rel_path, site_cfg, goes_through_common.linear) per site of a block.
+
+    rel_path doubles as the site kind and equals the site's param sub-tree
+    path inside the block (SiteCfg.name is constructed to match); MoE expert
+    sites are expert-stacked (no tape capture) so they're enumerated with
+    explicit rel paths.
+    """
+    if bcfg.kind == "mamba":
+        m = bcfg.mamba
+        out = [(m.in_proj.name, m.in_proj, True), (m.out_proj.name, m.out_proj, True)]
+    elif bcfg.kind == "dense":
+        out = _attn_site_list(bcfg.attn) + _mlp_site_list(bcfg.mlp)
+    elif bcfg.kind == "moe":
+        mo = bcfg.moe
+        out = _attn_site_list(bcfg.attn)
+        out.append((mo.router.name, mo.router, True))
+        out += [("moe/gate", mo.gate, False), ("moe/up", mo.up, False),
+                ("moe/down", mo.down, False)]
+        if mo.shared is not None:
+            out += _mlp_site_list(mo.shared)
+    else:
+        raise ValueError(bcfg.kind)
+    if bcfg.residual_mlp is not None:
+        out += _mlp_site_list(bcfg.residual_mlp)
+    return out
+
+
+def _make_site_spec(path, layer, stack_index, kind, sc, tape_key) -> SiteSpec:
+    return SiteSpec(
+        path=path, layer=layer, stack_index=stack_index, kind=kind,
+        d_in=sc.d_in, d_out=sc.d_out, bias=getattr(sc, "bias", False),
+        mode=sc.mode, lut=sc.lut, tape_key=tape_key,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +489,78 @@ class ModelBundle:
     def param_specs(self, key: jax.Array | None = None):
         k = jax.random.PRNGKey(0) if key is None else key
         return jax.eval_shape(self.init, k)
+
+    # ---------------- site registry ----------------
+    def sites(self) -> list[SiteSpec]:
+        """Enumerate every linear site of this model, across all families.
+
+        One SiteSpec per (site, layer): sites whose leaves are stacked over
+        a layer run appear once per layer with the SAME `path` and
+        increasing `stack_index` (consumers that act per-leaf dedupe on
+        `path`). This registry replaces per-family path-string surgery in
+        conversion, sharding, autotune warmup, and artifact snapshots.
+        """
+        out: list[SiteSpec] = []
+        if self.kind == "lm":
+            g = 0
+            for i, (count, bcfg) in enumerate(self.cfg.segments):
+                rels = _block_site_list(bcfg)
+                for j in range(count):
+                    for rel, sc, taped in rels:
+                        out.append(_make_site_spec(
+                            f"segments/{i}/{rel}", g + j, j, rel, sc,
+                            f"segments/{i}/{j}/{rel}" if taped else None,
+                        ))
+                g += count
+            if self.cfg.lm_head is not None:
+                out.append(_make_site_spec(
+                    "lm_head", None, None, "lm_head", self.cfg.lm_head, "lm_head"
+                ))
+            return out
+
+        if self.kind == "hybrid":
+            cfg = self.cfg
+            rels = _block_site_list(cfg.mamba_block)
+            for j in range(cfg.n_layers):
+                for rel, sc, taped in rels:
+                    out.append(_make_site_spec(
+                        f"mamba_stack/{rel}", j, j, rel, sc,
+                        f"mamba_stack/{j}/{rel}" if taped else None,
+                    ))
+            shared = ([(cfg.fuse.name, cfg.fuse, True)]
+                      + _attn_site_list(cfg.shared_attn)
+                      + _mlp_site_list(cfg.shared_mlp)
+                      + [(cfg.out.name, cfg.out, True)])
+            for rel, sc, taped in shared:
+                out.append(_make_site_spec(
+                    f"shared/{rel}", None, None, rel, sc,
+                    f"shared/{rel}" if taped else None,
+                ))
+            return out
+
+        # encdec: encoder layers number 0..E-1, decoder E..E+D-1 so
+        # (layer, kind) stays unique model-wide
+        cfg = self.cfg
+        rels = _block_site_list(cfg.enc_block)
+        for j in range(cfg.n_enc_layers):
+            for rel, sc, taped in rels:
+                out.append(_make_site_spec(
+                    f"encoder/{rel}", j, j, rel, sc,
+                    f"encoder/{j}/{rel}" if taped else None,
+                ))
+        dec = (_attn_site_list(cfg.dec_self) + _attn_site_list(cfg.dec_cross)
+               + _mlp_site_list(cfg.dec_mlp))
+        for j in range(cfg.n_dec_layers):
+            for rel, sc, taped in dec:
+                out.append(_make_site_spec(
+                    f"decoder/{rel}", cfg.n_enc_layers + j, j, rel, sc,
+                    f"decoder/{j}/{rel}" if taped else None,
+                ))
+        return out
+
+    def lut_sites(self) -> list[SiteSpec]:
+        """Registry entries that resolved to a LUT mode in this bundle."""
+        return [s for s in self.sites() if s.mode != Mode.DENSE]
 
     # ---------------- training ----------------
     def loss(self, params, batch, *, compute_dtype=jnp.bfloat16):
@@ -430,42 +649,47 @@ def build_model(arch: ArchSpec | str, mode: Mode | str = Mode.DENSE) -> ModelBun
         arch = get_arch(arch)
     if isinstance(mode, str):
         mode = Mode(mode)
+    res = _PlanResolver(arch, mode)
 
     if arch.family == "hybrid":
+        # mamba layers share one stacked config and the attention block is
+        # one weight-shared module, so sites resolve at kind granularity
+        # (layer=None); layer selectors don't subdivide this family.
         d = arch.d_model
         cfg = hybrid_mod.HybridCfg(
             vocab=arch.vocab, d_model=d, n_layers=arch.n_layers,
             attn_every=arch.attn_every,
-            mamba_block=_mamba_block(arch, mode),
-            shared_attn=_attn_cfg(arch, mode),
-            shared_mlp=_mlp_cfg(arch, mode),
-            fuse=_site(arch, 2 * d, d, Mode.DENSE),
-            out=_site(arch, d, d, mode),
+            mamba_block=_mamba_block(res),
+            shared_attn=_attn_cfg(res),
+            shared_mlp=_mlp_cfg(res),
+            fuse=res.site(2 * d, d, "fuse", lut_site=False),
+            out=res.site(d, d, "out"),
         )
         return ModelBundle(arch=arch, mode=mode, kind="hybrid", cfg=cfg)
 
     if arch.family == "audio":
         enc_block = tf_mod.BlockCfg(
             kind="dense", d_model=arch.d_model,
-            attn=_attn_cfg(arch, mode, causal=False),
-            mlp=_mlp_cfg(arch, mode),
+            attn=_attn_cfg(res, causal=False),
+            mlp=_mlp_cfg(res),
         )
         cfg = encdec_mod.EncDecCfg(
             vocab=arch.vocab, d_model=arch.d_model,
             n_enc_layers=arch.n_enc_layers, n_dec_layers=arch.n_layers,
             enc_frames=arch.enc_frames,
             enc_block=enc_block,
-            dec_self=_attn_cfg(arch, mode, causal=True),
-            dec_cross=_attn_cfg(arch, mode, causal=False, cross=True),
-            dec_mlp=_mlp_cfg(arch, mode),
+            dec_self=_attn_cfg(res, causal=True, prefix="self"),
+            dec_cross=_attn_cfg(res, causal=False, cross=True, prefix="cross"),
+            dec_mlp=_mlp_cfg(res),
         )
         return ModelBundle(arch=arch, mode=mode, kind="encdec", cfg=cfg)
 
     d = arch.d_model
     cfg = tf_mod.LMCfg(
         vocab=arch.vocab, d_model=d,
-        segments=_segments(arch, mode),
-        lm_head=None if arch.tie_embeddings else _site(arch, d, arch.vocab, Mode.DENSE),
+        segments=_segments(res),
+        lm_head=(None if arch.tie_embeddings
+                 else res.site(d, arch.vocab, "lm_head", lut_site=False)),
         takes_embeds=arch.takes_embeds,
     )
     return ModelBundle(arch=arch, mode=mode, kind="lm", cfg=cfg)

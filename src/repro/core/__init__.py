@@ -1,6 +1,15 @@
 """LUT-NN core: differentiable centroid learning + table-lookup AMM."""
 
 from repro.core.amm import LUTConfig, Mode, dense_bytes, dense_flops, lut_flops, lut_linear, lut_table_bytes
+from repro.core.plan import (
+    PAPER_DEFAULT,
+    LUTPlan,
+    PlanRule,
+    SitePolicy,
+    SiteSelector,
+    SiteSpec,
+    rule,
+)
 from repro.core.lut_layer import (
     deploy_param_specs,
     deploy_params,
@@ -10,7 +19,14 @@ from repro.core.lut_layer import (
 
 __all__ = [
     "LUTConfig",
+    "LUTPlan",
     "Mode",
+    "PAPER_DEFAULT",
+    "PlanRule",
+    "SitePolicy",
+    "SiteSelector",
+    "SiteSpec",
+    "rule",
     "lut_linear",
     "lut_flops",
     "dense_flops",

@@ -1,7 +1,7 @@
 """Dense -> LUT model conversion (the paper's offline pipeline, section 6.1).
 
   1. graft: copy the trained dense model's weights into a freshly-built
-     LUT_TRAIN model (same arch, LUT replacement policy applied); replaced
+     LUT_TRAIN model (same arch, LUT replacement plan applied); replaced
      layers keep their dense weight as the frozen table source.
   2. k-means init: run the original model on ~1024 training samples with the
      activation tape on, cluster every replaced site's inputs per codebook
@@ -12,8 +12,11 @@
      (repro.serving.artifact, DESIGN.md §8) so a fresh server can load it
      with no knowledge of the train-time pytree.
 
-Wired end-to-end for the LM family (incl. BERT); the per-site primitives in
-repro.core.lut_layer are model-agnostic.
+All three passes are family-agnostic walks of the site registry
+(`ModelBundle.sites()`, DESIGN.md §9.2): activation-tape records join to
+centroid leaves on (layer, kind), and deployed tables are built per
+registered site with that site's own LUTConfig — no per-family path-string
+surgery.
 """
 
 from __future__ import annotations
@@ -28,7 +31,11 @@ from repro.configs import ModelBundle, build_model
 from repro.core import kmeans, pq, quant
 from repro.core.amm import Mode
 from repro.models.common import tape_capture
-from repro.models import transformer as tf_mod
+
+# LUT_TRAIN leaves with no dense-model source: these legitimately keep
+# their fresh init through the graft. Anything else unmatched is a drifted
+# tree and must fail loudly instead of silently serving random weights.
+_TRAINABLE_LUT_LEAVES = ("centroids", "log_t")
 
 
 def _flat_paths(tree: Any) -> dict[str, jax.Array]:
@@ -41,29 +48,32 @@ def _flat_paths(tree: Any) -> dict[str, jax.Array]:
 
 def graft_dense_to_lut(dense_params: Any, lut_params: Any) -> Any:
     """Copy every shared leaf (w/b/norm/embed) from the dense model into the
-    LUT_TRAIN tree. Segments are re-aligned by global layer index: the dense
-    model has one segment of L layers, the LUT model splits the same layers
-    into (dense-run, lut-run) segments."""
+    LUT_TRAIN tree.
+
+    Direct path+shape matches cover the families whose stacking is
+    identical across modes (hybrid, enc-dec, and all unreplaced leaves).
+    LM segments are re-aligned by global layer index: the dense model has
+    one segment of L layers, the LUT model splits the same layers into
+    per-plan runs. Only the trainable LUT leaves (centroids, log_t) may
+    keep their fresh init — any other unmatched leaf raises.
+    """
     dflat = _flat_paths(dense_params)
     lflat = _flat_paths(lut_params)
 
-    # global layer offset per lut segment
-    def seg_count(params, i):
-        return jax.tree.leaves(params["segments"][i])[0].shape[0]
-
-    n_lut_segs = len(lut_params["segments"])
-    offsets = []
-    off = 0
-    for i in range(n_lut_segs):
-        offsets.append(off)
-        off += seg_count(lut_params, i)
+    # global layer offset per lut segment (LM family only)
+    offsets: list[int] = []
+    if isinstance(lut_params, dict) and "segments" in lut_params:
+        off = 0
+        for seg in lut_params["segments"]:
+            offsets.append(off)
+            off += jax.tree.leaves(seg)[0].shape[0]
 
     out = {}
     for path, leaf in lflat.items():
         if path in dflat and dflat[path].shape == leaf.shape:
             out[path] = dflat[path]
             continue
-        if path.startswith("segments/"):
+        if offsets and path.startswith("segments/"):
             parts = path.split("/")
             seg_i = int(parts[1])
             rest = "/".join(parts[2:])
@@ -72,9 +82,21 @@ def graft_dense_to_lut(dense_params: Any, lut_params: Any) -> Any:
                 lo = offsets[seg_i]
                 out[path] = src[lo : lo + leaf.shape[0]]
                 continue
-        out[path] = leaf        # centroids / log_t: keep init
+        if path.rsplit("/", 1)[-1] in _TRAINABLE_LUT_LEAVES:
+            out[path] = leaf        # centroids / log_t: keep init
+            continue
+        raise ValueError(
+            f"graft: no dense source for {path} (shape {leaf.shape}) — the "
+            f"dense and LUT models were built from different archs/plans"
+        )
     leaves = [out[p] for p in lflat]
     return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(lut_params), leaves)
+
+
+def _unrolled(bundle: ModelBundle) -> ModelBundle:
+    """Same bundle with an eager python-loop layer walk (tape capture)."""
+    cfg = dataclasses.replace(bundle.cfg, unroll=True, remat=False)
+    return dataclasses.replace(bundle, cfg=cfg)
 
 
 def kmeans_init_lut(
@@ -90,60 +112,53 @@ def kmeans_init_lut(
 ) -> Any:
     """Capture replaced-site inputs under the ORIGINAL dense model (paper
     section 6.1: the trained network on ~1024 samples) and k-means-init every
-    centroid table of the LUT model (Eq. 1)."""
-    assert bundle_lut.kind == "lm", "conversion wiring is LM-family (incl. BERT)"
-    cfg = dataclasses.replace(bundle_dense.cfg, unroll=True, remat=False)
+    centroid table of the LUT model (Eq. 1).
+
+    Tape records (keyed by the dense registry's `tape_key`) are joined to
+    the LUT registry on (layer, kind), which absorbs the differing segment
+    layouts of the two models — and works for every bundle kind.
+    """
+    src = _unrolled(bundle_dense)
 
     tape = tape_capture(max_rows=max_rows)
     with tape:
         for batch in sample_batches:
-            b, s = batch["labels"].shape[:2]
-            pos = batch.get("pos")
-            if pos is None:
+            if (bundle_dense.kind == "lm" and bundle_dense.arch.mrope_sections
+                    and "pos" not in batch):
+                b, s = batch["labels"].shape[:2]
                 pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
-                if bundle_dense.arch.mrope_sections:
-                    pos = jnp.broadcast_to(pos[None], (3, b, s))
-            tf_mod.lm_apply(
-                cfg, dense_params,
-                tokens=batch.get("tokens"), embeds=batch.get("embeds"),
-                pos=pos, compute_dtype=jnp.float32,
-            )
+                batch = dict(batch, pos=jnp.broadcast_to(pos[None], (3, b, s)))
+            src.loss(dense_params, batch, compute_dtype=jnp.float32)
 
-    # lut-model segment layout: map global layer index -> (segment, local)
-    seg_counts = [
-        jax.tree.leaves(seg)[0].shape[0] for seg in lut_params["segments"]
-    ]
-
-    def locate(global_j: int) -> tuple[int, int]:
-        off = 0
-        for i, c in enumerate(seg_counts):
-            if global_j < off + c:
-                return i, global_j - off
-            off += c
-        raise IndexError(global_j)
+    dense_by_tape = {
+        s.tape_key: s for s in bundle_dense.sites() if s.tape_key is not None
+    }
+    lut_by_site = {(s.layer, s.kind): s for s in bundle_lut.sites()}
 
     lflat = _flat_paths(lut_params)
     updates: dict[str, jax.Array] = {}
-    for rec_path, rows_list in tape.records.items():
-        # dense capture path = segments/<dense_seg>/<global_j>/<site...>
-        parts = rec_path.split("/")
-        dense_seg, global_j = int(parts[1]), int(parts[2])
-        # dense model may itself have >1 segment: offset by preceding counts
-        dense_counts = [
-            jax.tree.leaves(seg)[0].shape[0] for seg in dense_params["segments"]
-        ]
-        global_j += sum(dense_counts[:dense_seg])
-        seg_i, local_j = locate(global_j)
-        site_path = "/".join(parts[3:])
-        leaf_path = f"segments/{seg_i}/{site_path}/centroids"
+    for rec_key, rows_list in tape.records.items():
+        ds = dense_by_tape.get(rec_key)
+        if ds is None:
+            continue
+        ls = lut_by_site.get((ds.layer, ds.kind))
+        if ls is None or ls.mode != Mode.LUT_TRAIN:
+            continue                     # site stays dense under the plan
+        leaf_path = f"{ls.path}/centroids"
         if leaf_path not in lflat:
-            continue                     # dense-mode segment: nothing to init
-        stacked = updates.get(leaf_path, lflat[leaf_path])
-        c, k, v = stacked.shape[1:]
+            continue
         acts = jnp.concatenate(rows_list, axis=0)
         key, sub = jax.random.split(key)
-        cents = kmeans.kmeans_per_codebook(sub, acts, k=k, v=v, iters=kmeans_iters)
-        updates[leaf_path] = stacked.at[local_j].set(cents)
+        if ls.stack_index is None:
+            c, k, v = lflat[leaf_path].shape
+            updates[leaf_path] = kmeans.kmeans_per_codebook(
+                sub, acts, k=k, v=v, iters=kmeans_iters
+            )
+        else:
+            stacked = updates.get(leaf_path, lflat[leaf_path])
+            c, k, v = stacked.shape[1:]
+            cents = kmeans.kmeans_per_codebook(sub, acts, k=k, v=v, iters=kmeans_iters)
+            updates[leaf_path] = stacked.at[ls.stack_index].set(cents)
 
     out = dict(lflat)
     out.update(updates)
@@ -168,35 +183,75 @@ def convert_dense_to_lut_train(
     return bundle_lut, lut_params
 
 
+def _build_quantize_tables(P: jax.Array, W: jax.Array, lut) -> tuple[jax.Array, jax.Array]:
+    """Table build + int8 quantization for one site, vmapped over every
+    leading stack axis so a multi-layer (and multi-expert) deploy is ONE
+    traced computation instead of a per-layer python loop.
+
+    P: (*lead_p, C, K, V) centroids; W: (*lead_w, D, M) frozen weights with
+    lead_w = lead_p (layer-stacked) plus optionally one extra expert axis
+    that shares the codebooks (lead_p == () or a prefix of lead_w).
+    """
+    def one(p, w):
+        t = pq.build_table(p, w, stop_weight_grad=False)
+        qt = quant.quantize_table(
+            t, bits=lut.bits, per_column=lut.per_column,
+            m_shared=lut.int8_dot or lut.use_kernel,
+        )
+        return qt.q, qt.scale
+
+    fn = one
+    shared_lead = W.ndim - 2 - (P.ndim - 3)     # expert axes: codebooks shared
+    for _ in range(shared_lead):
+        fn = jax.vmap(fn, in_axes=(None, 0))
+    for _ in range(P.ndim - 3):                 # layer-stacked axes
+        fn = jax.vmap(fn, in_axes=(0, 0))
+    return jax.jit(fn)(P, W)
+
+
 def deploy_lut_train_params(bundle_lut: ModelBundle, lut_params: Any) -> tuple[ModelBundle, Any]:
-    """LUT_TRAIN params -> LUT_INFER params (int8 tables, weights dropped)."""
+    """LUT_TRAIN params -> LUT_INFER params (int8 tables, weights dropped).
+
+    Walks the LUT_INFER registry: every replaced site's table is built and
+    quantized with that site's own LUTConfig (bits / per-column / m-shared
+    layout for int8_dot and the fused kernel), so heterogeneous plans
+    deploy each site exactly as its serving path expects.
+    """
     bundle_inf = build_model(bundle_lut.arch, Mode.LUT_INFER)
-    inf_params = jax.eval_shape(bundle_inf.init, jax.random.PRNGKey(0))
-    iflat = _flat_paths(inf_params)
+    inf_specs = jax.eval_shape(bundle_inf.init, jax.random.PRNGKey(0))
+    iflat = _flat_paths(inf_specs)
     tflat = _flat_paths(lut_params)
+
+    site_by_path = {}
+    for s in bundle_inf.sites():
+        site_by_path.setdefault(s.path, s)      # dedupe layer-stacked entries
 
     out: dict[str, jax.Array] = {}
     for path, spec in iflat.items():
         if path in tflat and tflat[path].shape == spec.shape:
             out[path] = tflat[path]
             continue
-        if path.endswith("table_q") or path.endswith("table_scale"):
-            base = path.rsplit("/", 1)[0]
-            P = tflat[f"{base}/centroids"]
-            W = tflat[f"{base}/w"]
-            stacked_q, stacked_s = [], []
-            for j in range(P.shape[0]):
-                t = pq.build_table(P[j], W[j], stop_weight_grad=False)
-                qt = quant.quantize_table(t, bits=8)
-                stacked_q.append(qt.q)
-                stacked_s.append(qt.scale)
-            out[f"{base}/table_q"] = jnp.stack(stacked_q)
-            out[f"{base}/table_scale"] = jnp.stack(stacked_s)
-        elif path not in out:
+        if not (path.endswith("/table_q") or path.endswith("/table_scale")):
             raise KeyError(f"no source for deployed param {path}")
+        base = path.rsplit("/", 1)[0]
+        if f"{base}/table_q" in out:
+            continue                             # sibling already built
+        site = site_by_path.get(base)
+        if site is None or site.mode != Mode.LUT_INFER or site.lut is None:
+            raise KeyError(f"deployed table at {base} has no registered LUT site")
+        q, scale = _build_quantize_tables(
+            tflat[f"{base}/centroids"], tflat[f"{base}/w"], site.lut
+        )
+        for leaf_path, leaf in ((f"{base}/table_q", q), (f"{base}/table_scale", scale)):
+            if leaf.shape != iflat[leaf_path].shape:
+                raise ValueError(
+                    f"{leaf_path}: deployed shape {leaf.shape} != model spec "
+                    f"{iflat[leaf_path].shape}"
+                )
+            out[leaf_path] = leaf
     leaves = [out[p] for p in iflat]
-    tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(inf_params), leaves)
-    return build_model(bundle_lut.arch, Mode.LUT_INFER), tree
+    tree = jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(inf_specs), leaves)
+    return bundle_inf, tree
 
 
 def deploy_to_artifact(

@@ -65,8 +65,16 @@ class ShardingRules:
         return self._dp_spec_entry() if b % self.dp_size == 0 else None
 
     # ------------------------------------------------------------------
-    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
-        """PartitionSpec for one parameter leaf (possibly layer-stacked)."""
+    def param_spec(
+        self, path: str, shape: tuple[int, ...],
+        site_roles: dict[str, bool] | None = None,
+    ) -> P:
+        """PartitionSpec for one parameter leaf (possibly layer-stacked).
+
+        `site_roles` maps site path prefixes to their row-parallel role as
+        derived from the model's site registry (see `site_roles()`); without
+        it the role falls back to the parent-name heuristic.
+        """
         tp = self.tp
         name = path.split("/")[-1]
         stacked = any(
@@ -97,8 +105,12 @@ class ShardingRules:
         # bf16 output psum, instead of GSPMD re-sharding the (N, C*K)
         # encoding against an M-sharded table (section Perf, train iter 1).
         parts = path.split("/")
-        parent = parts[-2] if len(parts) >= 2 else ""
-        row_parallel = self.row_parallel and parent in ("down", "o", "out_proj")
+        parent_path = "/".join(parts[:-1])
+        if site_roles is not None and parent_path in site_roles:
+            row_parallel = self.row_parallel and site_roles[parent_path]
+        else:
+            parent = parts[-2] if len(parts) >= 2 else ""
+            row_parallel = self.row_parallel and parent in ("down", "o", "out_proj")
 
         if name == "table" and len(eff) == 2:            # embedding (vocab, d)
             put(0, "model") or put(1, "model")
@@ -134,9 +146,15 @@ class ShardingRules:
         # other centroids / log_t / norms / conv / ssm scalars: replicate
         return P(*spec)
 
-    def params_shardings(self, specs: Any) -> Any:
+    def params_shardings(self, specs: Any, bundle: Any = None) -> Any:
+        """Shardings per param leaf; pass the ModelBundle so site roles come
+        from the site registry instead of the path-name heuristic."""
+        roles = site_roles(bundle) if bundle is not None else None
+
         def mk(kp, leaf):
-            return NamedSharding(self.mesh, self.param_spec(_path(kp), leaf.shape))
+            return NamedSharding(
+                self.mesh, self.param_spec(_path(kp), leaf.shape, site_roles=roles)
+            )
 
         return jax.tree_util.tree_map_with_path(mk, specs)
 
@@ -203,6 +221,19 @@ class ShardingRules:
                 spec = P()
             out[k] = NamedSharding(self.mesh, spec)
         return out
+
+
+# site kinds that consume a column-parallel producer's sharded output —
+# these shard their INPUT dim (Megatron row-parallel role)
+_ROW_PARALLEL_LEAF_KINDS = ("down", "o", "out_proj")
+
+
+def site_roles(bundle: Any) -> dict[str, bool]:
+    """{site param-tree path: is_row_parallel} from the site registry."""
+    return {
+        s.path: s.kind.rsplit("/", 1)[-1] in _ROW_PARALLEL_LEAF_KINDS
+        for s in bundle.sites()
+    }
 
 
 def _axsize(mesh: Mesh, axis) -> int:

@@ -94,7 +94,7 @@ def lower_cell(
 
     params_specs = bundle.param_specs()
     n_params = _count_params(params_specs)
-    p_shard = rules.params_shardings(params_specs)
+    p_shard = rules.params_shardings(params_specs, bundle=bundle)
     batch_specs = input_specs(arch, shape)
     b_shard = rules.batch_shardings(batch_specs)
 

@@ -71,7 +71,11 @@ def main(argv: list[str] | None = None) -> None:
 
         art = load_artifact(args.artifact)
         bundle, params = art.bundle, art.params
-        use_kernel = bundle.arch.lut_use_kernel
+        # per-site plans can mix kernel/XLA sites: report kernel use from
+        # the registry, not a global flag
+        use_kernel = any(
+            s.lut is not None and s.lut.use_kernel for s in bundle.lut_sites()
+        )
         source = f"artifact {args.artifact} ({art.arch_name})"
     else:
         arch = reduce_arch(get_arch(args.arch), lut_use_kernel=args.use_kernel)

@@ -82,6 +82,9 @@ def main(argv: list[str] | None = None) -> None:
     if not args.lut:
         return
 
+    from repro.configs import effective_plan
+
+    print(f"replacement plan: {effective_plan(arch).describe()}")
     print("converting: k-means centroid init from activation samples ...")
     samples = [data.batch_at(10_000 + i) for i in range(2)]
     blut, lparams = convert.convert_dense_to_lut_train(bundle, params, samples, key)

@@ -104,6 +104,14 @@ class tape_capture:
         return False
 
 
+def set_tape_prefix(prefix: str) -> None:
+    """Point subsequent `linear()` records at this tape-key prefix (no-op
+    without an active tape). Unrolled layer loops call this so record keys
+    match the site registry's `tape_key`s (`ModelBundle.sites()`)."""
+    if _TAPE is not None:
+        _TAPE.prefix = prefix
+
+
 def linear(site: SiteCfg, p: Params, x: jax.Array) -> jax.Array:
     """Apply one linear site in its statically-configured mode."""
     if _TAPE is not None:

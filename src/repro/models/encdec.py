@@ -42,6 +42,7 @@ class EncDecCfg:
     dec_cross: AttnCfg              # cross-attention (causal=False, no rope)
     dec_mlp: mlp_mod.MLPCfg
     remat: bool = True
+    unroll: bool = False            # python-loop layers (activation capture)
 
 
 def _dec_block_init(key: jax.Array, cfg: EncDecCfg, *, dtype=jnp.float32) -> Params:
@@ -99,6 +100,15 @@ def encode(cfg: EncDecCfg, params: Params, frames: jax.Array, *, compute_dtype=j
     pos = jnp.arange(t, dtype=jnp.int32)[None, :].repeat(b, 0)
     x = frames.astype(compute_dtype)
 
+    if cfg.unroll:
+        from repro.models.common import set_tape_prefix
+
+        for j in range(cfg.n_enc_layers):
+            set_tape_prefix(f"encoder/{j}")
+            pl_ = jax.tree.map(lambda a: a[j], params["encoder"])
+            x, _, _ = block_apply(cfg.enc_block, pl_, x, pos=pos)
+        return rmsnorm(params["enc_norm"], x)
+
     def body(xc, pl_):
         y, _, _ = block_apply(cfg.enc_block, pl_, xc, pos=pos)
         return y, None
@@ -117,6 +127,15 @@ def cross_kv(cfg: EncDecCfg, params: Params, enc_out: jax.Array) -> Params:
         k = linear(a.k, pl_["cross"]["k"], enc_out).reshape(b, t, a.n_kv_heads, a.d_head)
         v = linear(a.v, pl_["cross"]["v"], enc_out).reshape(b, t, a.n_kv_heads, a.d_head)
         return {"k": k, "v": v}
+
+    if cfg.unroll:
+        from repro.models.common import set_tape_prefix
+
+        outs = []
+        for j in range(cfg.n_dec_layers):
+            set_tape_prefix(f"decoder/{j}")
+            outs.append(one(jax.tree.map(lambda x: x[j], params["decoder"])))
+        return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *outs)
 
     return jax.lax.map(one, params["decoder"])
 
@@ -164,14 +183,24 @@ def decode(
     if caches is None:
         cross = cross_kv(cfg, params, enc_out)
 
-        def body(xc, layer_in):
-            pl_, cr = layer_in
-            y, _ = _dec_block(cfg, pl_, xc, pos=pos, self_cache=None, cache_len=None, cross=cr)
-            return y, None
+        if cfg.unroll:
+            from repro.models.common import set_tape_prefix
 
-        fn = jax.checkpoint(body) if cfg.remat else body
-        x, _ = jax.lax.scan(fn, x, (params["decoder"], cross))
-        new_caches = None
+            for j in range(cfg.n_dec_layers):
+                set_tape_prefix(f"decoder/{j}")
+                pl_, cr = jax.tree.map(lambda a: a[j], (params["decoder"], cross))
+                x, _ = _dec_block(cfg, pl_, x, pos=pos, self_cache=None,
+                                  cache_len=None, cross=cr)
+            new_caches = None
+        else:
+            def body(xc, layer_in):
+                pl_, cr = layer_in
+                y, _ = _dec_block(cfg, pl_, xc, pos=pos, self_cache=None, cache_len=None, cross=cr)
+                return y, None
+
+            fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(fn, x, (params["decoder"], cross))
+            new_caches = None
     else:
         def body(xc, layer_in):
             pl_, sc, cr = layer_in

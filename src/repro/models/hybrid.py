@@ -44,6 +44,7 @@ class HybridCfg:
     fuse: SiteCfg                     # 2*d_model -> d_model (dense)
     out: SiteCfg                      # d_model -> d_model
     remat: bool = True
+    unroll: bool = False              # python-loop layers (activation capture)
 
     @property
     def invocation_points(self) -> tuple[int, ...]:
@@ -128,6 +129,23 @@ def hybrid_apply(
     x0 = x
 
     def mamba_seg(x, lo, hi, cstack):
+        if cfg.unroll:
+            # eager layer loop so the conversion tape sees concrete arrays,
+            # keyed by the registry's mamba_stack/<layer> prefixes
+            from repro.models.common import set_tape_prefix
+
+            new_c = [] if cstack is not None else None
+            for j in range(hi - lo):
+                set_tape_prefix(f"mamba_stack/{lo + j}")
+                pl_ = jax.tree.map(lambda a: a[lo + j], params["mamba_stack"])
+                cl_ = None if cstack is None else jax.tree.map(lambda a: a[lo + j], cstack)
+                x, nc, _ = block_apply(cfg.mamba_block, pl_, x, pos=pos, cache=cl_)
+                if cstack is not None:
+                    new_c.append(nc)
+            if cstack is not None:
+                new_c = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_c)
+            return x, new_c
+
         seg_p = jax.tree.map(lambda a: a[lo:hi], params["mamba_stack"])
 
         def body(xc, layer_in):
@@ -149,6 +167,11 @@ def hybrid_apply(
         if caches is not None:
             new_m.append(nc)
         if hi in cfg.invocation_points:
+            from repro.models.common import set_tape_prefix
+
+            # the shared block is weight-shared across invocation points:
+            # one registry path, activations pooled across invocations
+            set_tape_prefix("shared")
             a_cache = (
                 None if caches is None
                 else jax.tree.map(lambda a: a[inv], caches["attn"])

@@ -51,8 +51,15 @@ def expert_linear_init(key: jax.Array, s: ExpertSiteCfg, *, dtype=jnp.float32) -
     centroids = jax.random.normal(kc, (c, s.lut.k, s.lut.v), jnp.float32) * 0.02
     if s.mode == Mode.LUT_TRAIN:
         return {"w": w, "centroids": centroids, "log_t": init_log_temperature()}
-    # LUT_INFER: int8 tables per expert, shared codebooks
-    s_shape = (s.n_experts, 1, 1, s.d_out) if s.lut.int8_dot else (s.n_experts, c, 1, 1)
+    # LUT_INFER: int8 tables per expert, shared codebooks; scale layout
+    # mirrors quant.table_scale per the site's policy (deploy writes the
+    # same shapes — core.convert._build_quantize_tables)
+    if s.lut.int8_dot or s.lut.use_kernel:
+        s_shape = (s.n_experts, 1, 1, s.d_out)
+    elif s.lut.per_column:
+        s_shape = (s.n_experts, c, 1, s.d_out)
+    else:
+        s_shape = (s.n_experts, c, 1, 1)
     return {
         "centroids": centroids,
         "table_q": jax.random.randint(kc, (s.n_experts, c, s.lut.k, s.d_out), -127, 127, jnp.int8),

@@ -185,11 +185,10 @@ def _seg_apply(
         n_layers = jax.tree.leaves(seg_params)[0].shape[0]
         aux = jnp.zeros((), jnp.float32)
         new_caches = [] if caches is not None else None
-        from repro.models import common as _common
+        from repro.models.common import set_tape_prefix
 
         for j in range(n_layers):
-            if _common._TAPE is not None:
-                _common._TAPE.prefix = f"{prefix}/{j}"
+            set_tape_prefix(f"{prefix}/{j}")
             pl_ = jax.tree.map(lambda a: a[j], seg_params)
             cl_ = None if caches is None else jax.tree.map(lambda a: a[j], caches)
             x, nc, a = block_apply(bcfg, pl_, x, pos=pos, cache=cl_, cache_len=cache_len)
@@ -266,6 +265,9 @@ def lm_apply(
 
     x = rmsnorm(params["final_norm"], x)
     if cfg.lm_head is not None:
+        from repro.models.common import set_tape_prefix
+
+        set_tape_prefix("")                 # registry key: bare "lm_head"
         logits = linear(cfg.lm_head, params["lm_head"], x)
     else:
         logits = jnp.einsum(

@@ -33,12 +33,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import flatten_tree, tree_paths
-from repro.configs import ModelBundle, arch_from_dict, arch_to_dict, build_model
+from repro.configs import ModelBundle, arch_from_dict, arch_to_dict, build_model, effective_plan
 from repro.core.amm import Mode
+from repro.core.plan import LUTPlan
 from repro.kernels import autotune
 
 FORMAT = "lut-artifact"
-VERSION = 1
+# v2 (DESIGN.md §9.3): the manifest additionally records the RESOLVED
+# replacement plan under "plan" (LUTPlan.to_dict schema). v1 artifacts,
+# written before plans existed, migrate on load: their arch dict carries
+# the legacy lut_policy string, which the back-compat shim resolves to the
+# same plan the writer used.
+VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
@@ -94,6 +101,7 @@ def save_artifact(
         "format": FORMAT,
         "version": VERSION,
         "arch": arch_to_dict(bundle.arch),
+        "plan": effective_plan(bundle.arch).to_dict(),
         "mode": bundle.mode.value,
         "kind": bundle.kind,
         "treedef": str(jax.tree_util.tree_structure(host)),
@@ -136,10 +144,10 @@ def _snapshot_entries(bundle: ModelBundle) -> dict[str, Any]:
     (m, c, k, v) site signature — any n/dtype/backend, since serve-time
     slot counts and hardware are unknown at deploy time.
     """
-    from repro.serving.engine import iter_lut_kernel_sites
-
     sites = set()
-    for site in iter_lut_kernel_sites(bundle.cfg):
+    for site in bundle.sites():                          # registry walk (§9.2)
+        if site.mode != Mode.LUT_INFER or site.lut is None or not site.lut.use_kernel:
+            continue
         lut = site.lut
         c = site.d_in // lut.v
         sites.add(("lut_amm", site.d_out, c, lut.k, lut.v))
@@ -171,7 +179,7 @@ def _read_manifest(directory: pathlib.Path) -> dict[str, Any]:
     if manifest.get("format") != FORMAT:
         raise ValueError(f"{directory}: format={manifest.get('format')!r}, "
                          f"expected {FORMAT!r}")
-    if manifest.get("version") != VERSION:
+    if manifest.get("version") not in _READABLE_VERSIONS:
         raise ValueError(f"{directory}: artifact version "
                          f"{manifest.get('version')} unsupported (reader: {VERSION})")
     return manifest
@@ -210,6 +218,17 @@ def _load_resolved(directory: pathlib.Path, *, restore_autotune: bool) -> LUTArt
     manifest = _read_manifest(directory)
 
     arch = arch_from_dict(manifest["arch"])
+    if manifest["version"] >= 2:
+        # the recorded plan must equal what the arch dict resolves to — a
+        # hand-edited manifest whose plan and arch disagree would otherwise
+        # rebuild a model that silently mismatches the stored tables
+        recorded = LUTPlan.from_dict(manifest["plan"])
+        if recorded != effective_plan(arch):
+            raise ValueError(
+                f"{directory}: manifest plan does not match the arch's "
+                f"resolved plan — {recorded.describe()} vs "
+                f"{effective_plan(arch).describe()}"
+            )
     bundle = build_model(arch, Mode(manifest["mode"]))
     if bundle.kind != manifest["kind"]:
         raise ValueError(

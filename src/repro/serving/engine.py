@@ -63,9 +63,9 @@ def iter_lut_kernel_sites(cfg: Any, _seen: set[int] | None = None) -> Iterator[A
     """Yield every LUT_INFER linear-site config under `cfg` that runs the
     fused kernel.
 
-    Walks the nested dataclass/tuple config tree duck-typed (a site has
-    d_in/d_out/mode/lut attributes) so this stays import-cycle-free with the
-    model zoo.
+    Legacy duck-typed config walk (a site has d_in/d_out/mode/lut
+    attributes), kept for callers that only hold a cfg; bundle-holding
+    callers use the site registry (`ModelBundle.sites()`) instead.
     """
     if _seen is None:
         _seen = set()
@@ -104,12 +104,17 @@ def warm_lut_autotune(
     LUTArtifact's autotune snapshot, possibly wall-clock-measured on real
     hardware — are left untouched rather than re-derived analytically.
     """
+    from repro.core.amm import Mode
     from repro.kernels import autotune
 
     backend = jax.default_backend()
     cache = autotune.get_cache()
     tuned = set()
-    for site in iter_lut_kernel_sites(bundle.cfg):
+    # site registry walk (DESIGN.md §9.2): one entry per (site, layer), so
+    # heterogeneous plans warm every distinct (m, c, k, v) signature
+    for site in bundle.sites():
+        if site.mode != Mode.LUT_INFER or site.lut is None or not site.lut.use_kernel:
+            continue
         lut = site.lut
         c = site.d_in // lut.v
         for n in token_counts:
@@ -195,7 +200,7 @@ class ServingEngine:
             # tables column-sharded / codebooks replicated per param_spec,
             # caches sharded on the slot axis (+ sequence over "model")
             self._param_shardings = rules.params_shardings(
-                jax.eval_shape(lambda: params)
+                jax.eval_shape(lambda: params), bundle=bundle
             )
             self.params = jax.device_put(params, self._param_shardings)
             self._cache_shardings = rules.cache_shardings(

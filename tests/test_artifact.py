@@ -59,8 +59,9 @@ def test_artifact_roundtrip_exact_dtypes(key, tmp_path):
     assert "int8" in dtypes and "float32" in dtypes
 
     m = art.manifest
-    assert m["format"] == "lut-artifact" and m["version"] == 1
+    assert m["format"] == "lut-artifact" and m["version"] == 2
     assert m["mode"] == "lut_infer" and m["kind"] == "lm"
+    assert m["plan"]["version"] == 1 and m["plan"]["rules"]    # manifest v2 carries the plan
     assert any(v["dtype"] == "int8" for v in m["leaves"].values())
 
 

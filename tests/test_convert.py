@@ -84,5 +84,8 @@ def test_tape_capture_covers_lut_sites(setup):
     pos = jnp.arange(16, dtype=jnp.int32)[None, :].repeat(8, 0)
     with tape_capture() as tape:
         tf.lm_apply(cfg, dparams, tokens=batch["tokens"], pos=pos, compute_dtype=jnp.float32)
-    # 3 layers x 7 sites (q,k,v,o,gate,up,down)
-    assert len(tape.records) == 3 * 7
+    # 3 layers x 7 sites (q,k,v,o,gate,up,down) + lm_head — every taped
+    # registry site records under its tape_key
+    assert len(tape.records) == 3 * 7 + 1
+    keys = {s.tape_key for s in dense.sites() if s.tape_key is not None}
+    assert set(tape.records) == keys

@@ -1,0 +1,403 @@
+"""LUTPlan + site registry (DESIGN.md §9): back-compat shim identity,
+serialization round trips, registry/param-tree agreement across families,
+heterogeneous-plan lifecycle, and the strict graft / vmapped deploy."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (
+    LUTPlan,
+    SitePolicy,
+    arch_from_dict,
+    arch_to_dict,
+    build_model,
+    effective_plan,
+    get_arch,
+    reduce_arch,
+    rule,
+)
+from repro.core import convert, pq, quant
+from repro.core.amm import Mode
+from repro.core.plan import PAPER_DEFAULT
+from repro.serving.artifact import load_artifact, save_artifact
+from repro.serving.engine import ServingEngine
+
+
+def _tree_items(tree):
+    out = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)] = leaf
+    return out
+
+
+def _assert_trees_equal(a, b):
+    fa, fb = _tree_items(a), _tree_items(b)
+    assert fa.keys() == fb.keys()
+    for p in fa:
+        assert fa[p].dtype == fb[p].dtype, p
+        np.testing.assert_array_equal(np.asarray(fa[p]), np.asarray(fb[p]), err_msg=p)
+
+
+# ---------------------------------------------------------------------------
+# back-compat shim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,plan_ctor", [
+    ("all", LUTPlan.all),
+    ("all_but_first", LUTPlan.all_but_first),
+    ("last_n:2", lambda **kw: LUTPlan.last_n(2, **kw)),
+])
+def test_string_shim_builds_identical_trees(policy, plan_ctor, key):
+    """An arch configured via the legacy string builds a byte-identical
+    param tree to the same arch with the equivalent explicit LUTPlan."""
+    base = reduce_arch(get_arch("llama3_8b"), n_layers=3, vocab=64,
+                       d_model=64, d_ff=128)
+    via_string = dataclasses.replace(base, lut_policy=policy)
+    via_plan = dataclasses.replace(base, lut_plan=plan_ctor(v=base.lut_v))
+    for mode in (Mode.LUT_TRAIN, Mode.LUT_INFER):
+        ms, mp = build_model(via_string, mode), build_model(via_plan, mode)
+        assert ms.cfg == mp.cfg
+        _assert_trees_equal(ms.init(key), mp.init(key))
+
+
+def test_shim_segment_structure_preserved():
+    """The pre-plan segment layout survives the shim: all_but_first gives
+    (1 dense, L-1 lut); bert's last_n:6 gives (6 dense, 6 lut)."""
+    m = build_model(get_arch("llama3_8b"), Mode.LUT_TRAIN)
+    segs = m.cfg.segments
+    assert [n for n, _ in segs] == [1, get_arch("llama3_8b").n_layers - 1]
+    assert segs[0][1].attn.q.mode == Mode.DENSE
+    assert segs[1][1].attn.q.mode == Mode.LUT_TRAIN
+
+    mb = build_model(get_arch("bert_base"), Mode.LUT_TRAIN)
+    assert [n for n, _ in mb.cfg.segments] == [6, 6]
+
+
+def test_flat_flags_feed_shim_default():
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, lut_int8_dot=True)
+    plan = effective_plan(arch)
+    assert plan.default.k == arch.lut_k and plan.default.int8_dot is True
+    cfg = plan.lut_config(1, "mlp/gate", d_in=128, n_layers=2)
+    assert cfg is not None and cfg.int8_dot and cfg.k == arch.lut_k
+    assert plan.lut_config(0, "mlp/gate", 128, 2) is None   # all_but_first
+
+
+# ---------------------------------------------------------------------------
+# validation (satellite: last_n > n_layers)
+# ---------------------------------------------------------------------------
+
+def test_last_n_beyond_depth_raises():
+    arch = reduce_arch(get_arch("bert_base"), n_layers=4, vocab=64,
+                       d_model=64, d_ff=128)
+    arch = dataclasses.replace(arch, lut_policy="last_n:9")
+    with pytest.raises(ValueError, match="last_n"):
+        build_model(arch, Mode.LUT_TRAIN)
+    with pytest.raises(ValueError, match="last_n"):
+        LUTPlan.last_n(9).validate(4)
+    LUTPlan.last_n(4).validate(4)        # n == n_layers is legal
+
+
+def test_layer_set_out_of_range_raises():
+    with pytest.raises(ValueError, match="outside"):
+        LUTPlan(rules=(rule(layers="set", layer_set=(0, 7)),)).validate(4)
+
+
+def test_unknown_policy_string_raises():
+    with pytest.raises(ValueError, match="unknown lut_policy"):
+        LUTPlan.from_policy_string("every_other")
+
+
+def test_reduce_arch_clamps_stranded_last_n():
+    """Depth cuts used to strand bert's last_n:6 past the new layer count
+    (negative-count dense segment); reduce_arch now clamps it."""
+    arch = reduce_arch(get_arch("bert_base"))          # 4 layers, policy last_n:6
+    assert arch.lut_policy == f"last_n:{arch.n_layers}"
+    build_model(arch, Mode.LUT_TRAIN)                  # builds cleanly
+
+
+def test_reduce_arch_pins_set_selector_to_new_depth():
+    """Out-of-range explicit layer indices pin to the new last layer rather
+    than being dropped — a 'first and last dense' plan keeps its intent."""
+    plan = LUTPlan(rules=(
+        rule(),
+        rule(layers="set", layer_set=(0, 5), replace=False),
+    ))
+    big = dataclasses.replace(
+        reduce_arch(get_arch("qwen3_1p7b"), n_layers=6, vocab=64,
+                    d_model=64, d_ff=128), lut_plan=plan
+    )
+    small = reduce_arch(big, n_layers=4)
+    assert small.lut_plan.rules[1].select.layer_set == (0, 3)
+    m = build_model(small, Mode.LUT_TRAIN)
+    modes = {s.layer: s.mode for s in m.sites() if s.kind == "mlp/gate"}
+    assert modes[0] == modes[3] == Mode.DENSE
+    assert modes[1] == modes[2] == Mode.LUT_TRAIN
+
+
+# ---------------------------------------------------------------------------
+# serialization round trips
+# ---------------------------------------------------------------------------
+
+def test_plan_dict_roundtrip():
+    plan = LUTPlan(
+        rules=(
+            rule(kinds=("mlp/*",), k=16, int8_dot=True),
+            rule(kinds=("attn/*",), k=8, bits=4),
+            rule(layers="set", layer_set=(0, 3), replace=False),
+            rule(layers="last_n", n=2, v=16),
+        ),
+        default=SitePolicy(k=32).merged_over(PAPER_DEFAULT),
+    )
+    back = LUTPlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert back == plan
+
+    with pytest.raises(ValueError, match="version"):
+        LUTPlan.from_dict({"version": 9})
+
+
+def test_arch_dict_carries_plan():
+    plan = LUTPlan(rules=(rule(kinds=("mlp/*",), k=8),))
+    arch = dataclasses.replace(
+        reduce_arch(get_arch("qwen3_1p7b"), n_layers=2), lut_plan=plan
+    )
+    d = json.loads(json.dumps(arch_to_dict(arch)))
+    assert d["lut_plan"]["rules"][0]["policy"] == {"k": 8}
+    back = arch_from_dict(d)
+    assert back == arch and back.lut_plan == plan
+    # archs without a plan keep lut_plan=None through the round trip
+    plain = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2)
+    assert arch_from_dict(arch_to_dict(plain)) == plain
+
+
+# ---------------------------------------------------------------------------
+# site registry vs the real param trees (all three families)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch_id,kind", [
+    ("llama3_8b", "lm"), ("zamba2_1p2b", "hybrid"), ("whisper_tiny", "encdec"),
+])
+@pytest.mark.parametrize("mode", [Mode.DENSE, Mode.LUT_TRAIN, Mode.LUT_INFER])
+def test_sites_match_param_tree(arch_id, kind, mode):
+    bundle = build_model(reduce_arch(get_arch(arch_id)), mode)
+    assert bundle.kind == kind
+    flat = _tree_items(bundle.param_specs())
+    dirs = {p.rsplit("/", 1)[0] for p in flat}
+    sites = bundle.sites()
+    assert sites
+    for s in sites:
+        assert s.path in dirs, s
+        if s.mode == Mode.DENSE:
+            w = flat[f"{s.path}/w"]
+            assert w.shape[-2:] == (s.d_in, s.d_out), s
+            if s.stack_index is not None:
+                assert s.stack_index < w.shape[0]
+        elif s.mode == Mode.LUT_TRAIN:
+            assert f"{s.path}/centroids" in flat and f"{s.path}/w" in flat, s
+        else:
+            assert f"{s.path}/table_q" in flat, s
+            assert flat[f"{s.path}/table_q"].shape[-1] == s.d_out, s
+    # converse: every weight/centroid-bearing subtree is a registered site
+    site_paths = {s.path for s in sites}
+    for p in flat:
+        if p.endswith("/w") or p.endswith("/centroids"):
+            assert p.rsplit("/", 1)[0] in site_paths, p
+
+
+def test_sites_tape_keys_cover_capture(key):
+    """Unrolled-forward tape record keys == the registry's tape keys, for
+    every family (this is the join kmeans_init_lut relies on)."""
+    from repro.models.common import tape_capture
+
+    for arch_id in ("llama3_8b", "zamba2_1p2b", "whisper_tiny"):
+        arch = reduce_arch(get_arch(arch_id), n_layers=2, vocab=64,
+                           d_model=64, d_ff=128)
+        bundle = build_model(arch, Mode.DENSE)
+        src = dataclasses.replace(
+            bundle, cfg=dataclasses.replace(bundle.cfg, unroll=True, remat=False)
+        )
+        batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+                 "labels": jnp.zeros((2, 8), jnp.int32)}
+        if arch.family == "audio":
+            batch["frames"] = jnp.zeros((2, arch.enc_frames, arch.d_model))
+        with tape_capture() as tape:
+            src.loss(bundle.init(key), batch, compute_dtype=jnp.float32)
+        expected = {s.tape_key for s in bundle.sites() if s.tape_key is not None}
+        assert set(tape.records) == expected, arch_id
+
+
+# ---------------------------------------------------------------------------
+# strict graft (satellite)
+# ---------------------------------------------------------------------------
+
+def test_graft_raises_on_unmatched_dense_leaf(key):
+    arch = reduce_arch(get_arch("llama3_8b"), n_layers=2, vocab=64,
+                       d_model=64, d_ff=128)
+    lut = build_model(arch, Mode.LUT_TRAIN).init(key)
+    other = build_model(
+        dataclasses.replace(arch, d_ff=64), Mode.DENSE
+    ).init(key)
+    with pytest.raises(ValueError, match="no dense source"):
+        convert.graft_dense_to_lut(other, lut)
+
+
+# ---------------------------------------------------------------------------
+# vmapped deploy (satellite)
+# ---------------------------------------------------------------------------
+
+def test_deploy_matches_per_layer_reference(key):
+    """The vmapped table build equals the per-layer python-loop reference
+    (up to XLA contraction-order float noise; codes may shift by at most
+    one quantization step), including the site's own quantization layout."""
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=3, vocab=64,
+                       d_model=64, d_ff=128, lut_int8_dot=True)
+    blut = build_model(arch, Mode.LUT_TRAIN)
+    lparams = blut.init(key)
+    binf, iparams = convert.deploy_lut_train_params(blut, lparams)
+
+    site = next(s for s in binf.sites() if s.kind == "mlp/gate" and s.mode == Mode.LUT_INFER)
+    seg = int(site.path.split("/")[1])
+    P = lparams["segments"][seg]["mlp"]["gate"]["centroids"]
+    W = lparams["segments"][seg]["mlp"]["gate"]["w"]
+    got_q = iparams["segments"][seg]["mlp"]["gate"]["table_q"]
+    got_s = iparams["segments"][seg]["mlp"]["gate"]["table_scale"]
+    for j in range(P.shape[0]):
+        t = pq.build_table(P[j], W[j], stop_weight_grad=False)
+        qt = quant.quantize_table(t, bits=site.lut.bits, m_shared=True)
+        dq = np.abs(np.asarray(got_q[j], np.int32) - np.asarray(qt.q, np.int32))
+        assert dq.max() <= 1 and (dq > 0).mean() < 0.01
+        np.testing.assert_allclose(np.asarray(got_s[j]), np.asarray(qt.scale),
+                                   rtol=1e-6)
+    # int8_dot sites deploy the m-shared (1, 1, M) layout the serving path needs
+    assert got_s.shape[1:] == (1, 1, site.d_out)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous plan lifecycle (acceptance)
+# ---------------------------------------------------------------------------
+
+def _hetero_arch(n_layers=4):
+    plan = LUTPlan(rules=(
+        rule(kinds=("mlp/*",), k=16),
+        rule(kinds=("attn/*",), k=8),
+        rule(layers="set", layer_set=(0, n_layers - 1), replace=False),
+    ))
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=n_layers, vocab=64,
+                       d_model=64, d_ff=128)
+    return dataclasses.replace(arch, lut_plan=plan)
+
+
+def _greedy(bundle, params, prompts, n_tokens):
+    eng = ServingEngine(bundle, params, n_slots=2, max_seq=32, prefill_chunk=4,
+                        autotune_lut=False)
+    for p in prompts:
+        eng.submit(p, max_tokens=n_tokens)
+    return [r.out_tokens for r in sorted(eng.run_until_done(), key=lambda r: r.rid)]
+
+
+def test_heterogeneous_plan_full_lifecycle(key, tmp_path):
+    """K=16 MLP + K=8 attention, first and last layers dense: builds,
+    trains one step, deploys to an artifact, and reloads with
+    token-identical serving output (manifest v2 with the plan)."""
+    from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
+    from repro.train.train_step import make_train_step
+
+    arch = _hetero_arch()
+    blut = build_model(arch, Mode.LUT_TRAIN)
+
+    # structure: ends dense, middle mixed-K per kind
+    mids = [s for s in blut.sites() if s.layer in (1, 2) and s.stack_index is not None]
+    assert all(s.mode == Mode.LUT_TRAIN for s in mids if s.kind != "lm_head")
+    assert {s.lut.k for s in mids if s.kind.startswith("attn/")} == {8}
+    assert {s.lut.k for s in mids if s.kind.startswith("mlp/")} == {16}
+    ends = [s for s in blut.sites() if s.layer in (0, arch.n_layers - 1)
+            and s.stack_index is not None]
+    assert all(s.mode == Mode.DENSE for s in ends)
+
+    lparams = blut.init(key)
+    frozen = lut_frozen_mask(lparams)
+    opt = AdamW(lr=1e-3, rules=SOFT_PQ_RULES)
+    step = jax.jit(make_train_step(blut, opt, frozen_mask=frozen,
+                                   compute_dtype=jnp.float32))
+    batch = {"tokens": jax.random.randint(key, (2, 8), 0, 64),
+             "labels": jax.random.randint(key, (2, 8), 0, 64)}
+    lparams, _, metrics = step(lparams, opt.init(lparams, frozen), batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+    binf, iparams = convert.deploy_to_artifact(blut, lparams, tmp_path / "art")
+    art = load_artifact(tmp_path / "art")
+    assert art.manifest["version"] == 2
+    assert art.bundle.arch.lut_plan == arch.lut_plan
+    prompts = [[1, 2, 3, 4, 5], [7, 8, 9]]
+    assert _greedy(binf, iparams, prompts, 5) == \
+        _greedy(art.bundle, art.params, prompts, 5)
+
+
+def test_v1_artifact_migrates_on_load(key, tmp_path):
+    """A version-1 manifest (no plan, legacy lut_policy in the arch dict)
+    still loads: the shim resolves the same plan the v1 writer built with."""
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, vocab=64,
+                       d_model=64, d_ff=128)
+    bundle = build_model(arch, Mode.LUT_INFER)
+    params = bundle.init(key)
+    d = save_artifact(tmp_path / "art", bundle, params)
+    manifest = json.loads((d / "manifest.json").read_text())
+    manifest.pop("plan")
+    manifest["version"] = 1
+    manifest["arch"].pop("lut_plan")
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    art = load_artifact(d)
+    assert art.bundle.arch == arch
+    _assert_trees_equal(art.params, params)
+
+
+def test_v2_manifest_plan_mismatch_rejected(key, tmp_path):
+    arch = _hetero_arch(n_layers=2)
+    bundle = build_model(arch, Mode.LUT_INFER)
+    d = save_artifact(tmp_path / "art", bundle, bundle.init(key))
+    manifest = json.loads((d / "manifest.json").read_text())
+    manifest["plan"] = LUTPlan.all().to_dict()
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="plan"):
+        load_artifact(d)
+
+
+# ---------------------------------------------------------------------------
+# family-agnostic conversion (the old `kind == "lm"` assert is gone)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch_id", ["zamba2_1p2b", "whisper_tiny"])
+def test_convert_works_beyond_lm(arch_id, key):
+    from repro.data import MarkovLM
+
+    arch = reduce_arch(get_arch(arch_id), n_layers=2, vocab=64,
+                       d_model=64, d_ff=128)
+    data = MarkovLM(vocab=arch.vocab, seq_len=8, batch=2)
+    dense = build_model(arch, Mode.DENSE)
+    dparams = dense.init(key)
+
+    def batch(i):
+        b = data.batch_at(i)
+        if arch.family == "audio":
+            b["frames"] = jax.random.normal(
+                jax.random.PRNGKey(i), (2, arch.enc_frames, arch.d_model)
+            )
+        return b
+
+    blut, lparams = convert.convert_dense_to_lut_train(
+        dense, dparams, [batch(0)], key, kmeans_iters=3
+    )
+    rnd = blut.init(jax.random.PRNGKey(0))
+    moved = [
+        p for p, leaf in _tree_items(lparams).items()
+        if p.endswith("centroids")
+        and not np.array_equal(np.asarray(leaf), np.asarray(_tree_items(rnd)[p]))
+    ]
+    assert moved, "k-means init touched no centroids"
+    binf, iparams = convert.deploy_lut_train_params(blut, lparams)
+    loss = float(binf.loss(iparams, batch(3), compute_dtype=jnp.float32))
+    assert np.isfinite(loss)
