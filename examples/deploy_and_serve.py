@@ -1,12 +1,14 @@
-"""The full LUT-NN lifecycle in one script (DESIGN.md §8):
+"""The full LUT-NN lifecycle in one script (DESIGN.md §8, §10):
 
   dense pretrain -> k-means convert -> soft-PQ fine-tune -> int8 deploy
   -> LUTArtifact on disk -> serve the DEPLOYED tables from the artifact.
 
-This is the train half (`launch/train.py --lut`, reduced to ~2 minutes on a
+This is the train half (`launch/train.py --lut` — a thin CLI over the
+resumable `Recipe` pipeline of DESIGN.md §10, reduced to ~2 minutes on a
 laptop CPU) handing off to the serve half (`launch/serve.py --artifact`)
 through the self-describing artifact directory — no pytree plumbing between
-the two processes.
+the two processes. The artifact's manifest records the executed recipe;
+inspect it with `python -m repro.serving.artifact <dir>`.
 
   PYTHONPATH=src python examples/deploy_and_serve.py
 

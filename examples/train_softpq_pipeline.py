@@ -1,34 +1,43 @@
-"""End-to-end driver (deliverable b): dense pretrain -> convert -> soft-PQ
-QAT fine-tune -> int8 deploy -> eval + LUTArtifact, on a real (reduced)
-registry arch — wired through a HETEROGENEOUS per-site LUTPlan (DESIGN.md
-§9) instead of the legacy lut_policy string:
+"""End-to-end driver (deliverable b): the LUT-NN training lifecycle as a
+first-class `Recipe` (DESIGN.md §10) over a HETEROGENEOUS per-site LUTPlan
+(DESIGN.md §9):
 
   * MLP sites:       K=16 tables
   * attention sites: K=8 tables (cheaper encode, the paper's K ablation)
   * first and last layers: kept dense (the paper's accuracy-critical ends)
 
+and a custom stage list — dense pretrain, k-means centroid init, soft-PQ
+fine-tune *with dense-teacher distillation* (KL vs the frozen pretrained
+model, DESIGN.md §10.3), int8 deploy, and an eval gate that fails the run
+if the deployed model regresses more than 1.0 nats past the teacher.
+
   PYTHONPATH=src python examples/train_softpq_pipeline.py [--steps 200]
 
-The emitted artifact (manifest v2, plan included) serves with
-`python -m repro.launch.serve --artifact <dir>` (examples/deploy_and_serve.py
-shows the full loop). For the plain string-policy pipeline use
-`python -m repro.launch.train --lut`.
+The run is resumable: kill it at any point and re-run with the same
+--ckpt-dir — the pipeline manifest (<ckpt_dir>/recipe_run.json) resumes at
+the recorded stage and checkpoint step. The emitted artifact (manifest v2,
+plan + executed recipe included) serves with
+`python -m repro.launch.serve --artifact <dir>` and introspects with
+`python -m repro.serving.artifact <dir>`. For the plain flag-built default
+recipe use `python -m repro.launch.train --lut`.
 """
 
 import argparse
 import dataclasses
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import LUTPlan, build_model, effective_plan, get_arch, reduce_arch, rule
-from repro.core import convert
+from repro.configs import LUTPlan, effective_plan, get_arch, reduce_arch, rule
 from repro.core.amm import Mode
 from repro.data import MarkovLM
-from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
-from repro.optim.schedule import cosine_with_warmup
-from repro.train.train_step import make_train_step
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.recipe import (
+    CentroidInit,
+    Deploy,
+    DensePretrain,
+    Eval,
+    OptimSpec,
+    Recipe,
+    SoftPQ,
+)
+from repro.train.train_step import DistillSpec
 
 
 def main() -> None:
@@ -36,6 +45,7 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--arch", default="qwen3_1p7b")
     ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_plan_run")
     ap.add_argument("--artifact-dir", default="/tmp/repro_plan_artifact")
     args = ap.parse_args()
 
@@ -51,50 +61,41 @@ def main() -> None:
     arch = dataclasses.replace(arch, lut_plan=plan)
     print(f"replacement plan: {effective_plan(arch).describe()}")
 
+    recipe = Recipe(stages=(
+        DensePretrain(
+            steps=args.steps,
+            optim=OptimSpec(lr=3e-3, schedule="cosine", warmup_steps=20),
+            ckpt_every=max(50, args.steps // 4), log_every=50,
+        ),
+        CentroidInit(sample_batches=2, sample_start=10_000),
+        SoftPQ(
+            steps=args.steps,
+            optim=OptimSpec(lr=1e-3, schedule="cosine", warmup_steps=10,
+                            rules="distill"),
+            distill=DistillSpec(weight=0.5, temperature=2.0),
+            ckpt_every=max(50, args.steps // 4), log_every=50,
+        ),
+        Deploy(artifact_dir=args.artifact_dir),
+        Eval(batch_step=99_999, max_regression=1.0),
+    )).validate()
+    print(f"recipe: {recipe.describe()}")
+
     data = MarkovLM(vocab=arch.vocab, seq_len=64, batch=16)
-    key = jax.random.PRNGKey(0)
-
-    dense = build_model(arch, Mode.DENSE)
-    params = dense.init(key)
-    opt = AdamW(lr=cosine_with_warmup(3e-3, total_steps=args.steps, warmup_steps=20))
-    trainer = Trainer(
-        step_fn=jax.jit(make_train_step(dense, opt, compute_dtype=jnp.float32)),
-        batch_at=data.batch_at,
-        cfg=TrainerConfig(total_steps=args.steps, ckpt_every=10**9,
-                          ckpt_dir="/tmp/repro_plan_ckpt", log_every=50),
-    )
-    params, _ = trainer.fit(params, opt.init(params), start_step=0)
-    print(f"dense pretrain final loss {trainer.history[-1]['loss']:.4f}")
-
-    print("converting: k-means centroid init from activation samples ...")
-    samples = [data.batch_at(10_000 + i) for i in range(2)]
-    blut, lparams = convert.convert_dense_to_lut_train(dense, params, samples, key)
+    result = recipe.run(arch, data, ckpt_dir=args.ckpt_dir)
 
     # the registry shows how the plan resolved every site
     print("per-site resolution (layer 1):")
-    for s in blut.sites():
+    for s in result.lut_bundle.sites():
         if s.layer == 1 and s.stack_index is not None:
             lut = f"K={s.lut.k} V={s.lut.v}" if s.mode != Mode.DENSE else "dense"
             print(f"  {s.kind:12s} {s.d_in:4d}->{s.d_out:<4d} {lut}")
 
-    frozen = lut_frozen_mask(lparams)
-    opt2 = AdamW(lr=cosine_with_warmup(1e-3, total_steps=args.steps, warmup_steps=10),
-                 rules=SOFT_PQ_RULES)
-    trainer2 = Trainer(
-        step_fn=jax.jit(make_train_step(blut, opt2, frozen_mask=frozen,
-                                        compute_dtype=jnp.float32)),
-        batch_at=data.batch_at,
-        cfg=TrainerConfig(total_steps=args.steps, ckpt_every=10**9,
-                          ckpt_dir="/tmp/repro_plan_ckpt_lut", log_every=50),
-    )
-    lparams, _ = trainer2.fit(lparams, opt2.init(lparams, frozen), start_step=0)
-    print(f"soft-PQ fine-tune final loss {trainer2.history[-1]['loss']:.4f}")
-
-    binf, iparams = convert.deploy_to_artifact(blut, lparams, args.artifact_dir)
-    eval_loss = binf.loss(iparams, data.batch_at(99_999), compute_dtype=jnp.float32)
-    print(f"deployed INT8 LUT eval loss: {float(eval_loss):.4f}")
-    print(f"wrote LUTArtifact (manifest v2 + plan) to {args.artifact_dir} "
-          f"(serve: python -m repro.launch.serve --artifact {args.artifact_dir})")
+    ev = result.stage_result("eval") or {}
+    print(f"deployed INT8 LUT eval loss: {ev.get('deployed_loss'):.4f} "
+          f"(dense teacher {ev.get('dense_loss'):.4f})")
+    print(f"wrote LUTArtifact (manifest v2, plan + recipe) to {args.artifact_dir}\n"
+          f"  inspect: python -m repro.serving.artifact {args.artifact_dir}\n"
+          f"  serve:   python -m repro.launch.serve --artifact {args.artifact_dir}")
 
 
 if __name__ == "__main__":

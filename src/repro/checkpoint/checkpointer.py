@@ -32,6 +32,18 @@ import jax
 import numpy as np
 
 
+def atomic_write_json(path: str | os.PathLike, obj: Any) -> None:
+    """Write JSON with the same tmp-then-os.replace discipline as checkpoint
+    commits: a crash mid-write can never produce a half-readable file. Used
+    by the recipe run manifest (repro.train.recipe) and any other small
+    control-plane state that must survive kills."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.parent / (path.name + ".tmp")
+    tmp.write_text(json.dumps(obj, indent=2, sort_keys=True))
+    os.replace(tmp, path)
+
+
 def tree_paths(tree: Any) -> list[str]:
     """Slash-joined key path of every leaf, in tree-flatten order — the one
     path convention shared by checkpoints and deployment artifacts."""
@@ -57,12 +69,18 @@ class Checkpointer:
         self._thread: threading.Thread | None = None
 
     # ------------------------------------------------------------------
-    def save(self, step: int, tree: Any, *, blocking: bool = False) -> None:
-        """Snapshot now, write in the background (unless blocking)."""
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             on_commit=None) -> None:
+        """Snapshot now, write in the background (unless blocking).
+
+        `on_commit(step)` runs on the writer thread right after the atomic
+        commit — manifest-sync hooks piggyback on it without turning the
+        training loop's async save synchronous; exceptions are swallowed
+        (the hook must never fail a committed checkpoint)."""
         host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
         self.wait()
         self._thread = threading.Thread(
-            target=self._write, args=(step, host_tree), daemon=True
+            target=self._write, args=(step, host_tree, on_commit), daemon=True
         )
         self._thread.start()
         if blocking:
@@ -73,7 +91,7 @@ class Checkpointer:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host_tree: Any) -> None:
+    def _write(self, step: int, host_tree: Any, on_commit=None) -> None:
         final = self.dir / f"step_{step:08d}"
         tmp = self.dir / f"step_{step:08d}.tmp"
         if tmp.exists():
@@ -94,6 +112,11 @@ class Checkpointer:
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)
+        if on_commit is not None:
+            try:
+                on_commit(step)
+            except Exception:       # noqa: BLE001 — never fail a committed save
+                pass
         self._gc()
 
     def _gc(self) -> None:

@@ -563,9 +563,23 @@ class ModelBundle:
         return [s for s in self.sites() if s.mode != Mode.DENSE]
 
     # ---------------- training ----------------
-    def loss(self, params, batch, *, compute_dtype=jnp.bfloat16):
+    def train_logits(self, params, batch, *, compute_dtype=jnp.bfloat16):
+        """Training-time forward to logits: `(logits (B,S,vocab), aux)`.
+
+        This is the shared forward under `loss` and the teacher/student
+        halves of the distillation loss (repro.train.train_step). `aux` is
+        the MoE load-balance penalty for the lm family, 0 elsewhere.
+        """
         if self.kind == "lm":
-            return tf_mod.lm_loss(self.cfg, params, batch, compute_dtype=compute_dtype)
+            pos = batch.get("pos")
+            if pos is None:
+                b, s = batch["labels"].shape[:2]
+                pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+            logits, _, aux = tf_mod.lm_apply(
+                self.cfg, params, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), pos=pos, compute_dtype=compute_dtype,
+            )
+            return logits, aux
         if self.kind == "hybrid":
             b, s = batch["labels"].shape
             pos = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
@@ -573,9 +587,7 @@ class ModelBundle:
                 self.cfg, params, tokens=batch["tokens"], pos=pos,
                 compute_dtype=compute_dtype,
             )
-            from repro.models.common import cross_entropy
-
-            return cross_entropy(logits, batch["labels"])
+            return logits, jnp.zeros((), jnp.float32)
         # encdec
         enc_out = encdec_mod.encode(self.cfg, params, batch["frames"],
                                     compute_dtype=compute_dtype)
@@ -585,9 +597,19 @@ class ModelBundle:
             self.cfg, params, tokens=batch["tokens"], pos=pos, enc_out=enc_out,
             compute_dtype=compute_dtype,
         )
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss_from_logits(self, logits, aux, labels):
+        """CE (+ the lm family's MoE aux penalty) from `train_logits`
+        output — the one place the aux weight is applied."""
         from repro.models.common import cross_entropy
 
-        return cross_entropy(logits, batch["labels"])
+        ce = cross_entropy(logits, labels)
+        return ce + tf_mod.LM_AUX_WEIGHT * aux if self.kind == "lm" else ce
+
+    def loss(self, params, batch, *, compute_dtype=jnp.bfloat16):
+        logits, aux = self.train_logits(params, batch, compute_dtype=compute_dtype)
+        return self.loss_from_logits(logits, aux, batch["labels"])
 
     # ---------------- serving ----------------
     def init_caches(self, b: int, s_max: int, *, abstract=False, dtype=jnp.bfloat16):

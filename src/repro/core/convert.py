@@ -255,16 +255,19 @@ def deploy_lut_train_params(bundle_lut: ModelBundle, lut_params: Any) -> tuple[M
 
 
 def deploy_to_artifact(
-    bundle_lut: ModelBundle, lut_params: Any, directory: str | Any
+    bundle_lut: ModelBundle, lut_params: Any, directory: str | Any,
+    *, recipe: dict[str, Any] | None = None,
 ) -> tuple[ModelBundle, Any]:
     """Deploy LUT_TRAIN params and write the serving tree as a LUTArtifact.
 
     The returned (bundle, params) serve directly; the artifact directory is
     what ships — `launch/serve.py --artifact <dir>` (or
-    `repro.serving.artifact.load_artifact`) reconstructs both.
+    `repro.serving.artifact.load_artifact`) reconstructs both. `recipe`
+    (a `Recipe.to_dict` payload) is recorded in the manifest for training
+    provenance (DESIGN.md §10.2).
     """
     from repro.serving.artifact import save_artifact
 
     bundle_inf, inf_params = deploy_lut_train_params(bundle_lut, lut_params)
-    save_artifact(directory, bundle_inf, inf_params)
+    save_artifact(directory, bundle_inf, inf_params, recipe=recipe)
     return bundle_inf, inf_params

@@ -1,12 +1,21 @@
-"""Training launcher (end-to-end driver).
+"""Training launcher: a thin CLI over `repro.train.recipe.Recipe`.
 
 Runs the full LUT-NN lifecycle on any registered arch at a CPU-feasible
-reduction, or lowers the production config when --dryrun is given:
+reduction:
 
-  dense pretrain -> convert (k-means init) -> soft-PQ QAT fine-tune ->
-  int8 deploy -> eval -> LUTArtifact written to --artifact-dir
+  dense pretrain -> convert (k-means init) -> soft-PQ QAT fine-tune
+  [optionally distilling vs the frozen dense teacher] -> int8 deploy ->
+  eval gate -> LUTArtifact written to --artifact-dir
   (the train half of the train -> deploy -> serve lifecycle; the serve
   half is `launch/serve.py --artifact <dir>`).
+
+The pipeline itself is a first-class `Recipe` (DESIGN.md §10): pass
+`--recipe recipe.json` to run a custom stage list, or let the flags build
+the default recipe (`--dump-recipe` writes that default out as a starting
+point). Either way the run is resumable — killing the process and
+re-invoking with the same --ckpt-dir resumes at the recorded stage and
+checkpoint step, and the executed recipe is serialized into the artifact
+manifest for provenance.
 
 Example (the (b) end-to-end driver; ~100M-param model for a few hundred
 steps):
@@ -18,19 +27,10 @@ steps):
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCH_IDS, build_model, get_arch, reduce_arch
-from repro.core.amm import Mode
-from repro.core import convert
+from repro.configs import ARCH_IDS, get_arch, reduce_arch
 from repro.data import MarkovLM
-from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
-from repro.optim.schedule import cosine_with_warmup
-from repro.train.train_step import make_train_step
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.recipe import Recipe, default_recipe
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -42,6 +42,7 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lut", action="store_true", help="run the full LUT pipeline")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--artifact-dir", default=None,
@@ -49,7 +50,47 @@ def main(argv: list[str] | None = None) -> None:
                          "end of the --lut pipeline (default: "
                          "<ckpt-dir>_artifact); serve it with "
                          "launch/serve.py --artifact <dir>")
+    ap.add_argument("--recipe", default=None, metavar="RECIPE_JSON",
+                    help="run this serialized Recipe instead of the "
+                         "flag-built default (stage/optimizer flags are "
+                         "then ignored)")
+    ap.add_argument("--dump-recipe", default=None, metavar="PATH",
+                    help="write the flag-built default recipe as JSON and "
+                         "exit (edit it, then re-run with --recipe)")
+    ap.add_argument("--distill-weight", type=float, default=0.0,
+                    help="> 0 adds a KL term vs the frozen dense teacher "
+                         "to the soft-PQ stage (DESIGN.md §10.3)")
+    ap.add_argument("--distill-tau", type=float, default=2.0,
+                    help="distillation softening temperature")
+    ap.add_argument("--grad-compression", action="store_true",
+                    help="EXPERIMENTAL: int8 error-feedback gradient "
+                         "reduce in the dense stage (DESIGN.md §10.4)")
+    ap.add_argument("--eval-max-regression", type=float, default=None,
+                    help="fail the run if the deployed loss regresses more "
+                         "than this past the dense teacher's")
     args = ap.parse_args(argv)
+
+    artifact_dir = args.artifact_dir or args.ckpt_dir + "_artifact"
+    if args.recipe is not None and args.dump_recipe is not None:
+        ap.error("--dump-recipe writes the flag-built default recipe; "
+                 "combining it with --recipe is a no-op copy — drop one")
+    if not args.lut and args.recipe is None and (
+            args.distill_weight > 0.0 or args.eval_max_regression is not None):
+        ap.error("--distill-weight/--eval-max-regression configure the LUT "
+                 "pipeline stages — they require --lut")
+    if args.recipe is not None:
+        recipe = Recipe.load(args.recipe)
+    else:
+        recipe = default_recipe(
+            steps=args.steps, lut=args.lut, artifact_dir=artifact_dir,
+            distill_weight=args.distill_weight, distill_tau=args.distill_tau,
+            grad_compression=args.grad_compression,
+            eval_max_regression=args.eval_max_regression,
+        )
+    if args.dump_recipe is not None:
+        recipe.save(args.dump_recipe)
+        print(f"wrote recipe ({recipe.describe()}) to {args.dump_recipe}")
+        return
 
     arch = reduce_arch(
         get_arch(args.arch),
@@ -59,59 +100,22 @@ def main(argv: list[str] | None = None) -> None:
         d_ff=0 if get_arch(args.arch).d_ff == 0 else 2 * args.d_model,
     )
     data = MarkovLM(vocab=arch.vocab, seq_len=args.seq, batch=args.batch)
-    key = jax.random.PRNGKey(0)
 
-    bundle = build_model(arch, Mode.DENSE)
-    params = bundle.init(key)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"{arch.name}: {n_params/1e6:.1f}M params, dense pretrain {args.steps} steps")
+    if args.lut or args.recipe:
+        from repro.configs import effective_plan
 
-    opt = AdamW(lr=cosine_with_warmup(3e-3, total_steps=args.steps, warmup_steps=20))
-    trainer = Trainer(
-        step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
-        batch_at=data.batch_at,
-        cfg=TrainerConfig(
-            total_steps=args.steps, ckpt_every=max(50, args.steps // 4),
-            ckpt_dir=args.ckpt_dir, log_every=25,
-        ),
-    )
-    t0 = time.time()
-    params, _ = trainer.fit(params, opt.init(params), start_step=0)
-    print(f"dense done in {time.time()-t0:.1f}s, final loss {trainer.history[-1]['loss']:.4f}")
+        print(f"replacement plan: {effective_plan(arch).describe()}")
+    print(f"recipe: {recipe.describe()}")
 
-    if not args.lut:
-        return
+    result = recipe.run(arch, data, ckpt_dir=args.ckpt_dir, seed=args.seed)
 
-    from repro.configs import effective_plan
-
-    print(f"replacement plan: {effective_plan(arch).describe()}")
-    print("converting: k-means centroid init from activation samples ...")
-    samples = [data.batch_at(10_000 + i) for i in range(2)]
-    blut, lparams = convert.convert_dense_to_lut_train(bundle, params, samples, key)
-    frozen = lut_frozen_mask(lparams)
-    opt2 = AdamW(
-        lr=cosine_with_warmup(1e-3, total_steps=args.steps, warmup_steps=10),
-        rules=SOFT_PQ_RULES,
-    )
-    trainer2 = Trainer(
-        step_fn=jax.jit(
-            make_train_step(blut, opt2, frozen_mask=frozen, compute_dtype=jnp.float32)
-        ),
-        batch_at=data.batch_at,
-        cfg=TrainerConfig(
-            total_steps=args.steps, ckpt_every=max(50, args.steps // 4),
-            ckpt_dir=args.ckpt_dir + "_lut", log_every=25,
-        ),
-    )
-    lparams, _ = trainer2.fit(lparams, opt2.init(lparams, frozen), start_step=0)
-    print(f"soft-PQ fine-tune final loss {trainer2.history[-1]['loss']:.4f}")
-
-    artifact_dir = args.artifact_dir or args.ckpt_dir + "_artifact"
-    binf, iparams = convert.deploy_to_artifact(blut, lparams, artifact_dir)
-    eval_loss = binf.loss(iparams, data.batch_at(99_999), compute_dtype=jnp.float32)
-    print(f"deployed INT8 LUT eval loss: {float(eval_loss):.4f}")
-    print(f"wrote LUTArtifact to {artifact_dir} "
-          f"(serve: python -m repro.launch.serve --artifact {artifact_dir})")
+    if result.inf_bundle is not None:
+        deploy = next((e["result"] for e in result.manifest["stages"]
+                       if e["kind"] == "deploy" and e["result"]), {})
+        adir = deploy.get("artifact_dir", artifact_dir)
+        print(f"wrote LUTArtifact to {adir} "
+              f"(inspect: python -m repro.serving.artifact {adir}; "
+              f"serve: python -m repro.launch.serve --artifact {adir})")
 
 
 if __name__ == "__main__":

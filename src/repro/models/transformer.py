@@ -276,13 +276,18 @@ def lm_apply(
     return logits, new_caches, aux_total
 
 
+# MoE load-balance penalty weight — the ONE definition shared by lm_loss,
+# ModelBundle.loss_from_logits, and the distillation CE term
+LM_AUX_WEIGHT = 0.01
+
+
 def lm_loss(
     cfg: LMCfg,
     params: Params,
     batch: dict[str, jax.Array],
     *,
     compute_dtype=jnp.float32,
-    aux_weight: float = 0.01,
+    aux_weight: float = LM_AUX_WEIGHT,
 ) -> jax.Array:
     pos = batch.get("pos")
     if pos is None:

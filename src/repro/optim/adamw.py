@@ -41,6 +41,17 @@ SOFT_PQ_RULES = (
     GroupRule(pattern=r"(scale|norm|bias|_b|/b)$", weight_decay=0.0),
 )
 
+# Distillation fine-tune (recipe SoftPQ(distill=...), DESIGN.md §10.3): the
+# soft-PQ groups plus a slow group for the token embedding and output head.
+# The KL target is the frozen dense teacher's logit distribution; letting the
+# head/embedding chase the KL term at the full centroid lr drifts the
+# student's logit scale away from the teacher it is being matched to, so
+# those leaves move at 0.1x (and keep wd=0: they are shared with the CE
+# term's calibration).
+DISTILL_RULES = SOFT_PQ_RULES + (
+    GroupRule(pattern=r"(embed|lm_head)", lr_scale=0.1, weight_decay=0.0),
+)
+
 
 def lut_frozen_mask(params: Any) -> Any:
     """True for dense weights that live alongside centroids (LUT_TRAIN)."""

@@ -70,6 +70,12 @@ class LUTArtifact:
     def arch_name(self) -> str:
         return self.manifest["arch"]["name"]
 
+    @property
+    def recipe(self) -> dict[str, Any] | None:
+        """The executed training recipe (`Recipe.to_dict` payload), when
+        the artifact was deployed through `Recipe.run` (DESIGN.md §10.2)."""
+        return self.manifest.get("recipe")
+
 
 def save_artifact(
     directory: str | os.PathLike,
@@ -77,12 +83,16 @@ def save_artifact(
     params: Any,
     *,
     autotune_snapshot: bool = True,
+    recipe: dict[str, Any] | None = None,
 ) -> pathlib.Path:
     """Write `(bundle, params)` as a LUTArtifact directory (atomic).
 
     `params` is typically the LUT_INFER tree from
     `convert.deploy_lut_train_params`; any bundle/tree pair round-trips,
-    so dense baselines can ship through the same path.
+    so dense baselines can ship through the same path. `recipe` (a
+    `repro.train.recipe.Recipe.to_dict` payload) records the executed
+    training pipeline in the manifest — provenance only, never consulted
+    at load; `Recipe.from_dict(manifest["recipe"])` round-trips it.
     """
     final = pathlib.Path(directory)
     tmp = final.parent / (final.name + ".tmp")
@@ -110,6 +120,8 @@ def save_artifact(
             for k, v in flat.items()
         },
     }
+    if recipe is not None:
+        manifest["recipe"] = recipe
     (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=2))
 
     if autotune_snapshot:
@@ -185,6 +197,18 @@ def _read_manifest(directory: pathlib.Path) -> dict[str, Any]:
     return manifest
 
 
+def _resolve_artifact_dir(directory: str | os.PathLike) -> pathlib.Path:
+    """`<dir>`, falling back to `<dir>.old` when a crash mid-re-deploy
+    (between save_artifact's two os.replace calls) stranded the previous
+    good artifact there — shared by load_artifact and the inspector."""
+    directory = pathlib.Path(directory)
+    if not (directory / _MANIFEST).exists():
+        old = directory.parent / (directory.name + ".old")
+        if (old / _MANIFEST).exists():
+            return old
+    return directory
+
+
 def load_artifact(
     directory: str | os.PathLike, *, restore_autotune: bool = True
 ) -> LUTArtifact:
@@ -197,13 +221,7 @@ def load_artifact(
     the param tree therefore fails loudly at load, not as NaNs at serve.
     """
     primary = pathlib.Path(directory)
-    resolved = primary
-    if not (primary / _MANIFEST).exists():
-        # a crash mid-re-deploy (between save_artifact's two os.replace
-        # calls) strands the previous good artifact at <dir>.old
-        old = primary.parent / (primary.name + ".old")
-        if (old / _MANIFEST).exists():
-            resolved = old
+    resolved = _resolve_artifact_dir(primary)
     try:
         return _load_resolved(resolved, restore_autotune=restore_autotune)
     except FileNotFoundError:
@@ -299,3 +317,61 @@ def restore_autotune_snapshot(directory: str | os.PathLike) -> int:
         except OSError:
             pass
     return merged
+
+
+def describe_artifact(directory: str | os.PathLike) -> str:
+    """Human-readable artifact summary (the `python -m repro.serving.artifact
+    <dir>` inspector): arch, plan, recipe provenance, leaf accounting."""
+    directory = _resolve_artifact_dir(directory)
+    manifest = _read_manifest(directory)
+    arch = arch_from_dict(manifest["arch"])
+    leaves = manifest["leaves"]
+    n_bytes = sum(
+        int(np.prod(rec["shape"] or [1])) * np.dtype(
+            np.uint16 if rec["dtype"] == "bfloat16" else rec["dtype"]
+        ).itemsize
+        for rec in leaves.values()
+    )
+    lines = [
+        f"LUTArtifact at {directory}",
+        f"  format    : {manifest['format']} v{manifest['version']}",
+        f"  arch      : {arch.name} ({arch.family}, {arch.n_layers}L, "
+        f"d={arch.d_model}, vocab={arch.vocab})",
+        f"  mode/kind : {manifest['mode']} / {manifest['kind']}",
+        f"  plan      : {effective_plan(arch).describe()}"
+        if manifest["version"] >= 2 else "  plan      : (v1: legacy policy)",
+        f"  leaves    : {len(leaves)} arrays, {n_bytes/1e6:.2f} MB",
+    ]
+    int8 = sum(1 for r in leaves.values() if r["dtype"] == "int8")
+    if int8:
+        lines.append(f"  int8 LUTs : {int8} table leaves")
+    recipe = manifest.get("recipe")
+    if recipe is not None:
+        stages = " -> ".join(s.get("name", s.get("stage", "?"))
+                             for s in recipe.get("stages", []))
+        lines.append(f"  recipe    : {stages}")
+    else:
+        lines.append("  recipe    : (none recorded)")
+    return "\n".join(lines)
+
+
+def _main(argv: list[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serving.artifact",
+        description="Inspect a LUTArtifact directory.",
+    )
+    ap.add_argument("directory", help="artifact directory to describe")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the raw manifest JSON instead")
+    args = ap.parse_args(argv)
+    if args.json:
+        print(json.dumps(_read_manifest(_resolve_artifact_dir(args.directory)),
+                         indent=2))
+    else:
+        print(describe_artifact(args.directory))
+
+
+if __name__ == "__main__":
+    _main()

@@ -4,11 +4,30 @@
   loss (bf16 compute, fp32 reductions) -> grads -> global-norm clip ->
   AdamW with param groups -> new params/opt-state + metrics.
 
+Loss variants (recipe stages, DESIGN.md §10):
+  * plain CE (dense pretrain, soft-PQ fine-tune)
+  * distillation (`distill=DistillSpec(...)` + a frozen dense teacher):
+    (1-w)·CE + w·τ²·KL(teacher‖student) over temperature-τ-softened
+    logits — the Deep Lookup Network / TableNet recipe of training the
+    LUT-constrained student directly against the dense model's outputs.
+    Metrics then additionally report `ce` and `distill_kl`.
+
+Metrics always include the learned softmax temperature summary when the
+param tree has LUT sites: `t_mean`/`t_min` over every `log_t` leaf, so
+centroid-learning convergence (t -> 0, the argmax limit) is observable in
+the trainer's history and log lines.
+
 Gradient accumulation (giant archs) scans over microbatches so the saved
 activations of only one microbatch are live at a time; grads accumulate in
 fp32. Under pjit, the gradient all-reduce across the data axes is emitted
 by GSPMD from the sharding of params (replicated or FSDP) vs batch (data-
 sharded) — no explicit collectives here.
+
+`make_compressed_train_step` is the opt-in data-parallel variant wiring
+`repro.train.grad_compression` (int8 error-feedback all-reduce) under the
+same (params, state, batch) step contract: the compression residual rides
+inside the opaque optimizer-state slot, so the Trainer checkpoints and
+restores it with no special casing.
 """
 
 from __future__ import annotations
@@ -23,11 +42,99 @@ from repro.configs import ModelBundle
 from repro.optim import AdamW, AdamWState
 
 
+@dataclasses.dataclass(frozen=True)
+class DistillSpec:
+    """Dense-teacher distillation term for the soft-PQ fine-tune.
+
+    weight:      mix of the KL term, loss = (1-w)·CE + w·KL (0 disables)
+    temperature: softening τ; the KL is scaled by τ² so its gradient
+                 magnitude stays comparable across τ (Hinton et al.)
+    """
+
+    weight: float = 0.5
+    temperature: float = 2.0
+
+    def __post_init__(self):
+        if not (0.0 <= self.weight <= 1.0):
+            raise ValueError(f"distill weight must be in [0, 1], got {self.weight}")
+        if self.temperature <= 0.0:
+            raise ValueError(f"distill temperature must be > 0, got {self.temperature}")
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"weight": self.weight, "temperature": self.temperature}
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "DistillSpec":
+        return cls(weight=d["weight"], temperature=d["temperature"])
+
+
 def make_loss_fn(bundle: ModelBundle, *, compute_dtype=jnp.bfloat16):
     def loss_fn(params, batch):
         return bundle.loss(params, batch, compute_dtype=compute_dtype)
 
     return loss_fn
+
+
+def make_distill_loss_fn(
+    bundle: ModelBundle,
+    distill: DistillSpec,
+    teacher_bundle: ModelBundle,
+    teacher_params: Any,
+    *,
+    compute_dtype=jnp.bfloat16,
+):
+    """(params, batch) -> (loss, {"ce", "distill_kl"}) against the frozen
+    dense teacher's logits. Teacher and student must share the vocab (they
+    are the same arch in DENSE vs LUT_TRAIN mode)."""
+    tau = distill.temperature
+    w = distill.weight
+
+    def loss_fn(params, batch):
+        from repro.models.common import cross_entropy
+        from repro.models.transformer import LM_AUX_WEIGHT
+
+        logits, aux = bundle.train_logits(params, batch, compute_dtype=compute_dtype)
+        ce = cross_entropy(logits, batch["labels"])      # task CE only
+        t_logits, _ = teacher_bundle.train_logits(
+            teacher_params, batch, compute_dtype=compute_dtype
+        )
+        t_logits = jax.lax.stop_gradient(t_logits).astype(jnp.float32)
+        s_logp = jax.nn.log_softmax(logits.astype(jnp.float32) / tau, axis=-1)
+        t_logp = jax.nn.log_softmax(t_logits / tau, axis=-1)
+        kl = jnp.mean(jnp.sum(jnp.exp(t_logp) * (t_logp - s_logp), axis=-1)) * tau**2
+        loss = (1.0 - w) * ce + w * kl
+        # MoE load-balance penalty rides OUTSIDE the CE/KL blend — scaling
+        # it by (1-w) would switch router balancing off at w=1
+        if bundle.kind == "lm":
+            loss = loss + LM_AUX_WEIGHT * aux
+        return loss, {"ce": ce, "distill_kl": kl}
+
+    return loss_fn
+
+
+def temperature_stats(params: Any) -> dict[str, jax.Array]:
+    """mean/min of t = exp(log_t) over every LUT site in the tree (empty
+    dict for a dense model). Trace-safe: leaf selection is by path."""
+    ts = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if kp and str(getattr(kp[-1], "key", "")) == "log_t":
+            ts.append(jnp.exp(leaf.astype(jnp.float32)).ravel())
+    if not ts:
+        return {}
+    t = jnp.concatenate(ts)
+    return {"t_mean": jnp.mean(t), "t_min": jnp.min(t)}
+
+
+def _with_aux(loss_fn: Callable) -> Callable:
+    """Normalize a loss fn to the (loss, aux_dict) contract."""
+
+    def fn(params, batch):
+        out = loss_fn(params, batch)
+        if isinstance(out, tuple):
+            return out
+        return out, {}
+
+    return fn
 
 
 def make_train_step(
@@ -37,8 +144,15 @@ def make_train_step(
     frozen_mask: Any | None = None,
     compute_dtype=jnp.bfloat16,
     grad_accum: int = 1,
+    loss_fn: Callable | None = None,
 ) -> Callable:
-    loss_fn = make_loss_fn(bundle, compute_dtype=compute_dtype)
+    """The canonical step. `loss_fn` overrides the plain CE loss (e.g. with
+    `make_distill_loss_fn`); it may return a scalar or (scalar, aux_dict) —
+    aux entries are merged into the step metrics."""
+    loss_fn = _with_aux(
+        loss_fn if loss_fn is not None
+        else make_loss_fn(bundle, compute_dtype=compute_dtype)
+    )
 
     def split_micro(batch):
         def r(a):
@@ -61,28 +175,82 @@ def make_train_step(
 
     def train_step(params, opt_state: AdamWState, batch):
         if grad_accum == 1:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
         else:
             micro = split_micro(batch)
 
             def acc_fn(carry, mb):
-                loss_acc, g_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                loss_acc, aux_acc, g_acc = carry
+                (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g
                 )
-                return (loss_acc + l, g_acc), None
+                aux_acc = jax.tree.map(lambda x, y: x + y, aux_acc, a)
+                return (loss_acc + l, aux_acc, g_acc), None
 
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros((), jnp.float32), g0), micro)
+            aux_spec = jax.eval_shape(
+                loss_fn, params, jax.tree.map(lambda m: m[0], micro)
+            )[1]
+            a0 = jax.tree.map(lambda _: jnp.zeros((), jnp.float32), aux_spec)
+            (loss, aux, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), a0, g0), micro
+            )
             loss = loss / grad_accum
+            aux = jax.tree.map(lambda a: a / grad_accum, aux)
             grads = jax.tree.map(lambda g: g / grad_accum, grads)
 
         new_params, new_opt, gnorm = opt.update(grads, opt_state, params, frozen_mask)
         metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        metrics.update({k: v.astype(jnp.float32) for k, v in aux.items()})
+        metrics.update(temperature_stats(new_params))
         return new_params, new_opt, metrics
 
     return train_step
+
+
+def make_compressed_train_step(
+    bundle: ModelBundle,
+    opt: AdamW,
+    mesh,
+    *,
+    axis: str = "data",
+    frozen_mask: Any | None = None,
+    compute_dtype=jnp.bfloat16,
+) -> Callable:
+    """Data-parallel step with the int8 error-feedback gradient reduce
+    (repro.train.grad_compression) in place of GSPMD's implicit bf16
+    all-reduce. EXPERIMENTAL (DESIGN.md §10.4): grads cross the wire as
+    int8 — numerics differ from the exact step.
+
+    State contract: `opt_state` is `{"opt": AdamWState, "residual": tree}`
+    (build with `init_compressed_state`); batch dim 0 is sharded over
+    `axis`. Otherwise identical to `make_train_step`'s contract, so the
+    Trainer drives and checkpoints it unchanged.
+    """
+    from repro.train.grad_compression import make_compressed_grad_fn
+
+    loss_fn = make_loss_fn(bundle, compute_dtype=compute_dtype)
+    grad_fn = make_compressed_grad_fn(loss_fn, mesh, axis=axis)
+
+    def train_step(params, state, batch):
+        loss, grads, new_residual = grad_fn(params, state["residual"], batch)
+        new_params, new_opt, gnorm = opt.update(
+            grads, state["opt"], params, frozen_mask
+        )
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        metrics.update(temperature_stats(new_params))
+        return new_params, {"opt": new_opt, "residual": new_residual}, metrics
+
+    return train_step
+
+
+def init_compressed_state(opt: AdamW, params: Any, frozen: Any | None = None) -> dict:
+    from repro.train.grad_compression import init_residual
+
+    return {"opt": opt.init(params, frozen), "residual": init_residual(params)}
 
 
 def make_serve_step(bundle: ModelBundle, *, compute_dtype=jnp.bfloat16) -> Callable:

@@ -33,6 +33,11 @@ class TrainerConfig:
     keep_last: int = 3
     log_every: int = 10
     max_retries: int = 2
+    # per-step restore-and-continue budget: a step that fails this many
+    # times without ever completing is a deterministic fault and re-raises
+    # (instead of restore -> replay -> fail forever); completing a step
+    # resets its budget, so scattered transient faults never accumulate
+    max_restores: int = 3
     heartbeat: str | None = None
 
 
@@ -41,8 +46,10 @@ class Trainer:
     step_fn: Callable            # (params, opt_state, batch) -> (params, opt, metrics)
     batch_at: Callable[[int], Any]
     cfg: TrainerConfig
-    fail_at: int | None = None               # test hook: raise at this step once
+    fail_at: int | None = None               # test hook: raise at this step
     fail_exc: Exception | None = None
+    fail_times: int = 1                      # > max_retries exhausts the StepGuard
+    on_checkpoint: Callable[[int], None] | None = None   # after each committed save
 
     def __post_init__(self):
         self.ckpt = Checkpointer(self.cfg.ckpt_dir, keep_last=self.cfg.keep_last)
@@ -50,11 +57,13 @@ class Trainer:
         self.guard = StepGuard(max_retries=self.cfg.max_retries)
         self.hb = HeartbeatFile(self.cfg.heartbeat) if self.cfg.heartbeat else None
         self.history: list[dict] = []
-        self._failed_once = False
+        self._fail_count = 0
+        self._restores_at_step: dict[int, int] = {}
 
     # ------------------------------------------------------------------
     def resume(self, params: Any, opt_state: Any) -> tuple[int, Any, Any]:
         """Restore the newest committed checkpoint if one exists."""
+        self.ckpt.wait()            # an in-flight async save must commit first
         latest = self.ckpt.latest_step()
         if latest is None:
             return 0, params, opt_state
@@ -73,24 +82,40 @@ class Trainer:
             t0 = time.time()
 
             def run(step=step, batch=batch, params=params, opt_state=opt_state):
-                if self.fail_at == step and not self._failed_once:
-                    self._failed_once = True
+                if self.fail_at == step and self._fail_count < self.fail_times:
+                    self._fail_count += 1
                     raise (self.fail_exc or RuntimeError("injected failure"))
                 return self.step_fn(params, opt_state, batch)
 
             try:
                 params, opt_state, metrics = self.guard.run(run)
             except RuntimeError:
-                # exhausted retries -> restore-and-continue (fault tolerance)
+                # exhausted retries -> restore-and-continue (fault tolerance).
+                # With nothing committed there is nothing to restore: falling
+                # back to the CURRENT (already-advanced) params at step 0
+                # would double-apply updates and loop forever on a
+                # persistent failure — re-raise instead. Likewise, a fault
+                # that keeps recurring across max_restores restore cycles is
+                # deterministic, not transient: re-raise rather than replay
+                # the same failing step forever.
+                self.ckpt.wait()
+                if self.ckpt.latest_step() is None:
+                    raise
+                n = self._restores_at_step.get(step, 0) + 1
+                self._restores_at_step[step] = n
+                if n > self.cfg.max_restores:
+                    raise
                 step, params, opt_state = self.resume(params, opt_state)
                 continue
 
+            # this step completed: its restore budget resets (only a step
+            # that NEVER completes accumulates toward max_restores)
+            self._restores_at_step.pop(step, None)
             dt = time.time() - t0
             slow = self.monitor.record(step, dt)
             rec = {
                 "step": step,
-                "loss": float(metrics["loss"]),
-                "grad_norm": float(metrics["grad_norm"]),
+                **{k: float(v) for k, v in metrics.items()},
                 "seconds": dt,
                 "straggler": slow,
             }
@@ -98,13 +123,21 @@ class Trainer:
             if self.hb:
                 self.hb.beat(step, loss=rec["loss"])
             if self.cfg.log_every and step % self.cfg.log_every == 0:
+                # learned softmax temperature: converges toward 0 (argmax
+                # limit) as centroid learning sharpens (paper §3.2)
+                temp = (f" t {rec['t_mean']:.3f}/{rec['t_min']:.3f}"
+                        if "t_mean" in rec else "")
+                kl = f" kl {rec['distill_kl']:.4f}" if "distill_kl" in rec else ""
                 print(
                     f"step {step:6d} loss {rec['loss']:.4f} "
-                    f"gnorm {rec['grad_norm']:.3f} {dt*1e3:.0f}ms"
+                    f"gnorm {rec['grad_norm']:.3f}{temp}{kl} {dt*1e3:.0f}ms"
                     + (" [straggler]" if slow else "")
                 )
             step += 1
             if step % self.cfg.ckpt_every == 0 or step == self.cfg.total_steps:
-                self.ckpt.save(step, {"params": params, "opt": opt_state})
+                # on_checkpoint fires on the writer thread post-commit so the
+                # loop keeps its async-save property
+                self.ckpt.save(step, {"params": params, "opt": opt_state},
+                               on_commit=self.on_checkpoint)
         self.ckpt.wait()
         return params, opt_state

@@ -201,8 +201,8 @@ def test_e2e_train_writes_artifact_serve_loads_it(tmp_path, capsys, monkeypatch)
     captured = {}
     orig_deploy = convert.deploy_to_artifact
 
-    def spy(blut, lparams, directory):
-        binf, iparams = orig_deploy(blut, lparams, directory)
+    def spy(blut, lparams, directory, **kw):
+        binf, iparams = orig_deploy(blut, lparams, directory, **kw)
         captured["bundle"], captured["params"] = binf, iparams
         return binf, iparams
 

@@ -1,0 +1,463 @@
+"""Recipe pipeline API: serialization round-trips, validation, parity with
+the legacy imperative driver, distillation, the eval gate, grad-compression
+opt-in, and kill-and-resume (subprocess SIGKILL mid-soft-PQ)."""
+
+import json
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+from repro.data import MarkovLM
+from repro.train.recipe import (
+    CentroidInit,
+    Deploy,
+    DensePretrain,
+    Eval,
+    OptimSpec,
+    Recipe,
+    RecipeError,
+    SoftPQ,
+    default_recipe,
+)
+from repro.train.train_step import DistillSpec
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def tiny_arch():
+    return reduce_arch(
+        get_arch("qwen3_1p7b"), n_layers=2, vocab=64, d_model=48, d_ff=96
+    )
+
+
+def tiny_data(arch):
+    return MarkovLM(vocab=arch.vocab, seq_len=16, batch=8, branching=4)
+
+
+def tiny_recipe(art_dir, *, dense_steps=6, softpq_steps=6, distill=None,
+                ckpt_every=3, eval_max_loss=None, eval_max_regression=None,
+                grad_compression=False):
+    return Recipe(stages=(
+        DensePretrain(steps=dense_steps, ckpt_every=ckpt_every, log_every=0,
+                      grad_compression=grad_compression),
+        CentroidInit(sample_batches=1, sample_start=500, max_rows=512),
+        SoftPQ(steps=softpq_steps, ckpt_every=ckpt_every, log_every=0,
+               distill=distill,
+               optim=OptimSpec(lr=1e-3, schedule="cosine", warmup_steps=2,
+                               rules="distill" if distill else "soft_pq")),
+        Deploy(artifact_dir=str(art_dir)),
+        Eval(batch_step=999, max_loss=eval_max_loss,
+             max_regression=eval_max_regression),
+    )).validate()
+
+
+# ---------------------------------------------------------------------------
+# serialization + validation
+# ---------------------------------------------------------------------------
+
+def test_round_trip_default_recipe():
+    r = default_recipe(steps=100, lut=True, artifact_dir="/tmp/a",
+                       distill_weight=0.25, distill_tau=3.0,
+                       eval_max_regression=0.7)
+    d = r.to_dict()
+    assert Recipe.from_dict(d) == r
+    assert Recipe.from_dict(d).to_dict() == d          # exact dict round trip
+    assert Recipe.from_json(r.to_json()) == r
+
+
+def test_round_trip_through_file(tmp_path):
+    r = tiny_recipe(tmp_path / "art", distill=DistillSpec(weight=0.5),
+                    grad_compression=True, eval_max_regression=1.0)
+    p = tmp_path / "recipe.json"
+    r.save(p)
+    assert Recipe.load(p) == r
+    # json on disk is plain data (editable by hand)
+    raw = json.loads(p.read_text())
+    assert raw["stages"][0]["stage"] == "dense_pretrain"
+    assert raw["stages"][2]["distill"] == {"weight": 0.5, "temperature": 2.0}
+
+
+def test_dense_only_recipe():
+    r = default_recipe(steps=10, lut=False)
+    assert len(r.stages) == 1 and isinstance(r.stages[0], DensePretrain)
+    assert Recipe.from_dict(r.to_dict()) == r
+
+
+def test_validation_rejects_bad_recipes():
+    with pytest.raises(RecipeError, match="no stages"):
+        Recipe(stages=()).validate()
+    with pytest.raises(RecipeError, match="unique"):
+        Recipe(stages=(DensePretrain(), DensePretrain())).validate()
+    with pytest.raises(RecipeError, match="requires an earlier"):
+        Recipe(stages=(SoftPQ(),)).validate()
+    with pytest.raises(RecipeError, match="requires an earlier"):
+        Recipe(stages=(DensePretrain(), SoftPQ())).validate()   # no centroid init
+    with pytest.raises(RecipeError, match="unknown stage kind"):
+        Recipe.from_dict({"version": 1, "stages": [{"stage": "nope"}]})
+    with pytest.raises(RecipeError, match="version"):
+        Recipe.from_dict({"version": 99, "stages": []})
+
+
+def test_direct_pq_deploy_is_valid():
+    # deploying straight after centroid init (no fine-tune) is the paper's
+    # direct-PQ baseline and must validate
+    Recipe(stages=(DensePretrain(), CentroidInit(), Deploy())).validate()
+
+
+# ---------------------------------------------------------------------------
+# execution: parity with the legacy imperative driver
+# ---------------------------------------------------------------------------
+
+def test_default_recipe_reproduces_legacy_pipeline(tmp_path):
+    """The flag-built default recipe must replay the historical
+    launch/train.py --lut driver: same stage sequence, same losses at a
+    fixed seed, and the artifact manifest must carry the recipe."""
+    import jax.numpy as jnp
+
+    from repro.core import convert
+    from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
+    from repro.optim.schedule import cosine_with_warmup
+    from repro.train.train_step import make_train_step
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    steps = 6
+    arch = tiny_arch()
+    data = tiny_data(arch)
+
+    # --- legacy imperative sequence (pre-recipe launch/train.py) ---
+    key = jax.random.PRNGKey(0)
+    bundle = build_model(arch, Mode.DENSE)
+    params = bundle.init(key)
+    opt = AdamW(lr=cosine_with_warmup(3e-3, total_steps=steps, warmup_steps=20))
+    tr = Trainer(
+        step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=steps, ckpt_every=max(50, steps // 4),
+                          ckpt_dir=str(tmp_path / "legacy_dense"), log_every=0),
+    )
+    params, _ = tr.fit(params, opt.init(params), start_step=0)
+    legacy_dense_loss = tr.history[-1]["loss"]
+
+    samples = [data.batch_at(10_000 + i) for i in range(2)]
+    blut, lparams = convert.convert_dense_to_lut_train(bundle, params, samples, key)
+    frozen = lut_frozen_mask(lparams)
+    opt2 = AdamW(lr=cosine_with_warmup(1e-3, total_steps=steps, warmup_steps=10),
+                 rules=SOFT_PQ_RULES)
+    tr2 = Trainer(
+        step_fn=jax.jit(make_train_step(blut, opt2, frozen_mask=frozen,
+                                        compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=steps, ckpt_every=max(50, steps // 4),
+                          ckpt_dir=str(tmp_path / "legacy_lut"), log_every=0),
+    )
+    lparams, _ = tr2.fit(lparams, opt2.init(lparams, frozen), start_step=0)
+    legacy_softpq_loss = tr2.history[-1]["loss"]
+    binf, iparams = convert.deploy_lut_train_params(blut, lparams)
+    legacy_eval = float(binf.loss(iparams, data.batch_at(99_999),
+                                  compute_dtype=jnp.float32))
+
+    # --- the same pipeline as a Recipe ---
+    art = tmp_path / "artifact"
+    recipe = default_recipe(steps=steps, lut=True, artifact_dir=str(art))
+    assert [s.KIND for s in recipe.stages] == [
+        "dense_pretrain", "centroid_init", "soft_pq", "deploy", "eval"
+    ]
+    res = recipe.run(arch, data, ckpt_dir=tmp_path / "run", seed=0, verbose=False)
+
+    dense_final = res.stage_result("dense")["final_loss"]
+    softpq_final = res.stage_result("soft_pq")["final_loss"]
+    eval_loss = res.stage_result("eval")["deployed_loss"]
+    np.testing.assert_allclose(dense_final, legacy_dense_loss, rtol=1e-6)
+    np.testing.assert_allclose(softpq_final, legacy_softpq_loss, rtol=1e-6)
+    np.testing.assert_allclose(eval_loss, legacy_eval, rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(iparams), jax.tree.leaves(res.inf_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+    # provenance: the artifact manifest carries the recipe, exactly
+    manifest = json.loads((art / "manifest.json").read_text())
+    assert manifest["recipe"] == recipe.to_dict()
+    assert Recipe.from_dict(manifest["recipe"]) == recipe
+
+
+# ---------------------------------------------------------------------------
+# distillation
+# ---------------------------------------------------------------------------
+
+def test_distill_recipe_end_to_end(tmp_path):
+    arch = tiny_arch()
+    data = tiny_data(arch)
+    recipe = tiny_recipe(tmp_path / "art", distill=DistillSpec(weight=0.5,
+                                                               temperature=2.0))
+    res = recipe.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+
+    hist = res.histories["soft_pq"]
+    assert hist, "soft-PQ stage produced no history"
+    for rec in hist:
+        assert "distill_kl" in rec and "ce" in rec
+        assert np.isfinite(rec["distill_kl"]) and rec["distill_kl"] >= 0
+        # the mixed loss really is the advertised blend
+        np.testing.assert_allclose(
+            rec["loss"], 0.5 * rec["ce"] + 0.5 * rec["distill_kl"], rtol=1e-5
+        )
+    sp = res.stage_result("soft_pq")
+    assert "distill_kl" in sp and "t_mean" in sp
+    # the recorded recipe round-trips with the distill spec intact
+    m = json.loads((tmp_path / "art" / "manifest.json").read_text())
+    r2 = Recipe.from_dict(m["recipe"])
+    assert r2.stages[2].distill == DistillSpec(weight=0.5, temperature=2.0)
+
+
+def test_distill_spec_validated_at_construction():
+    """An out-of-range DistillSpec fails at recipe authoring time (and so
+    at from_dict), never hours later when the SoftPQ stage starts."""
+    with pytest.raises(ValueError, match="weight"):
+        DistillSpec(weight=1.5)
+    with pytest.raises(ValueError, match="temperature"):
+        DistillSpec(weight=0.5, temperature=0.0)
+    with pytest.raises(ValueError, match="weight"):
+        Recipe.from_dict({
+            "version": 1,
+            "stages": [
+                {"stage": "dense_pretrain", "name": "dense", "steps": 1,
+                 "optim": OptimSpec().to_dict(), "ckpt_every": 1,
+                 "log_every": 0, "grad_accum": 1, "compute_dtype": "float32",
+                 "grad_compression": False},
+                {"stage": "centroid_init", "name": "ci", "sample_batches": 1,
+                 "sample_start": 0, "kmeans_iters": 1, "max_rows": 64},
+                {"stage": "soft_pq", "name": "sp", "steps": 1,
+                 "optim": OptimSpec().to_dict(),
+                 "distill": {"weight": 2.0, "temperature": 1.0},
+                 "ckpt_every": 1, "log_every": 0, "compute_dtype": "float32"},
+            ],
+        })
+
+
+def test_optim_spec_validated_at_construction():
+    """Schedule/rule-set typos fail at authoring/from_dict time, not after
+    earlier stages have already run."""
+    with pytest.raises(RecipeError, match="unknown schedule"):
+        OptimSpec(schedule="cos")
+    with pytest.raises(RecipeError, match="unknown rule set"):
+        OptimSpec(rules="soft-pq")         # typo for soft_pq
+    bad = default_recipe(steps=2).to_dict()
+    bad["stages"][2]["optim"]["rules"] = "soft-pq"
+    with pytest.raises(RecipeError, match="unknown rule set"):
+        Recipe.from_dict(bad)
+
+
+def test_resume_guard_checks_data_fingerprint(tmp_path):
+    """Dataclass data sources are fingerprinted into the run manifest: a
+    resume with different data flags (seq/batch/...) is refused."""
+    arch = tiny_arch()
+    recipe = Recipe(stages=(DensePretrain(steps=2, ckpt_every=1, log_every=0),))
+    recipe.run(arch, tiny_data(arch), ckpt_dir=tmp_path / "run", verbose=False)
+    other = MarkovLM(vocab=arch.vocab, seq_len=8, batch=4, branching=4)
+    with pytest.raises(RecipeError, match="DIFFERENT data"):
+        recipe.run(arch, other, ckpt_dir=tmp_path / "run", verbose=False)
+
+
+def test_grad_compression_rejects_grad_accum():
+    with pytest.raises(RecipeError, match="grad_accum"):
+        DensePretrain(grad_accum=2, grad_compression=True)
+
+
+def test_resume_guard_checks_arch_and_seed(tmp_path):
+    """Re-invoking the same ckpt-dir with a different arch or seed must be
+    refused, not silently resumed into a mismatched tree."""
+    import dataclasses as dc
+
+    arch = tiny_arch()
+    data = tiny_data(arch)
+    recipe = Recipe(stages=(DensePretrain(steps=2, ckpt_every=1, log_every=0),))
+    recipe.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+    with pytest.raises(RecipeError, match="DIFFERENT seed"):
+        recipe.run(arch, data, ckpt_dir=tmp_path / "run", seed=1, verbose=False)
+    other = dc.replace(arch, d_model=32, n_heads=2, n_kv_heads=2, d_head=16)
+    with pytest.raises(RecipeError, match="DIFFERENT arch"):
+        recipe.run(other, data, ckpt_dir=tmp_path / "run", verbose=False)
+
+
+# ---------------------------------------------------------------------------
+# eval gate
+# ---------------------------------------------------------------------------
+
+def test_eval_gate_fails_run_and_marks_manifest(tmp_path):
+    arch = tiny_arch()
+    data = tiny_data(arch)
+    recipe = tiny_recipe(tmp_path / "art", dense_steps=2, softpq_steps=2,
+                         eval_max_loss=0.01)      # unreachable: gate must trip
+    with pytest.raises(RecipeError, match="eval gate"):
+        recipe.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+    manifest = json.loads((tmp_path / "run" / "recipe_run.json").read_text())
+    by_name = {e["name"]: e for e in manifest["stages"]}
+    assert by_name["eval"]["status"] == "failed"
+    assert "eval gate" in by_name["eval"]["result"]["error"]
+    assert by_name["soft_pq"]["status"] == "done"    # earlier stages committed
+    # the rejected deployment is retracted: nothing downstream can serve it
+    assert not (tmp_path / "art" / "manifest.json").exists()
+
+    # re-running the SAME recipe resumes: only the failed stage re-executes
+    # (it fails again — the gate is deterministic)
+    with pytest.raises(RecipeError, match="eval gate"):
+        recipe.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+
+    # changing a DONE stage's config is refused (its committed outputs were
+    # produced under the recorded config)
+    retrained = tiny_recipe(tmp_path / "art", dense_steps=4, softpq_steps=2,
+                            eval_max_loss=0.01)
+    with pytest.raises(RecipeError, match="DIFFERENT recipe"):
+        retrained.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+
+    # but loosening the FAILED gate resumes in place: done stages restore,
+    # only eval re-runs — no retrain forced by a gate trip
+    relaxed = tiny_recipe(tmp_path / "art", dense_steps=2, softpq_steps=2,
+                          eval_max_loss=100.0)
+    res = relaxed.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+    assert res.stage_result("eval")["deployed_loss"] <= 100.0
+    assert res.histories == {}            # nothing retrained
+    manifest = json.loads((tmp_path / "run" / "recipe_run.json").read_text())
+    assert manifest["recipe"] == relaxed.to_dict()   # reconciled in place
+    # the passing gate re-deployed the retracted artifact
+    assert (tmp_path / "art" / "manifest.json").exists()
+
+
+def test_eval_regression_gate_passes_when_close(tmp_path):
+    arch = tiny_arch()
+    data = tiny_data(arch)
+    recipe = tiny_recipe(tmp_path / "art", eval_max_regression=5.0)
+    res = recipe.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+    ev = res.stage_result("eval")
+    assert ev["deployed_loss"] <= ev["dense_loss"] + 5.0
+
+
+# ---------------------------------------------------------------------------
+# grad compression opt-in (experimental)
+# ---------------------------------------------------------------------------
+
+def test_grad_compression_dense_stage(tmp_path):
+    arch = tiny_arch()
+    data = tiny_data(arch)
+    recipe = Recipe(stages=(
+        DensePretrain(steps=8, ckpt_every=4, log_every=0, grad_compression=True),
+    )).validate()
+    res = recipe.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+    hist = res.histories["dense"]
+    assert len(hist) == 8
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert hist[-1]["loss"] < hist[0]["loss"]        # still learns through int8
+    # the compression residual rides inside the checkpointed state: a fresh
+    # run over the same dir restores it (stage reports done, params equal)
+    res2 = recipe.run(arch, data, ckpt_dir=tmp_path / "run", verbose=False)
+    for a, b in zip(jax.tree.leaves(res.dense_params),
+                    jax.tree.leaves(res2.dense_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume (the crash-recovery acceptance test)
+# ---------------------------------------------------------------------------
+
+_CHILD = r"""
+import json, os, signal, sys
+import jax
+from repro.configs import get_arch, reduce_arch
+from repro.data import MarkovLM
+from repro.train.recipe import (CentroidInit, Deploy, DensePretrain, Eval,
+                                OptimSpec, Recipe, SoftPQ)
+
+kill_at_call = int(sys.argv[1])        # batch_at call index to SIGKILL at (-1: never)
+ckpt_dir = sys.argv[2]
+out_json = sys.argv[3]
+
+arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, vocab=64, d_model=48, d_ff=96)
+base = MarkovLM(vocab=arch.vocab, seq_len=16, batch=8, branching=4)
+
+calls = {"n": 0}
+class KillingData:
+    def batch_at(self, step):
+        calls["n"] += 1
+        if kill_at_call >= 0 and calls["n"] >= kill_at_call:
+            os.kill(os.getpid(), signal.SIGKILL)   # hard kill, no cleanup
+        return base.batch_at(step)
+
+recipe = Recipe(stages=(
+    DensePretrain(steps=8, ckpt_every=4, log_every=0),
+    CentroidInit(sample_batches=1, sample_start=500, max_rows=512),
+    SoftPQ(steps=10, ckpt_every=3, log_every=0),
+    Deploy(artifact_dir=ckpt_dir + "/art"),
+    Eval(batch_step=999),
+)).validate()
+res = recipe.run(arch, KillingData(), ckpt_dir=ckpt_dir, verbose=False)
+
+out = {
+    "dense_steps": [h["step"] for h in res.histories.get("dense", [])],
+    "softpq_steps": [h["step"] for h in res.histories.get("soft_pq", [])],
+    "softpq_final_loss": res.stage_result("soft_pq")["final_loss"],
+    "eval_loss": res.stage_result("eval")["deployed_loss"],
+    "stages": [[e["name"], e["status"], e["step"]] for e in res.manifest["stages"]],
+}
+with open(out_json, "w") as f:
+    json.dump(out, f)
+"""
+
+
+def _run_child(tmp_path, name, kill_at_call, ckpt_dir, *, expect_kill):
+    out_json = tmp_path / f"{name}.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD, str(kill_at_call), str(ckpt_dir),
+         str(out_json)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    if expect_kill:
+        assert proc.returncode == -signal.SIGKILL, (
+            f"child should have been SIGKILLed:\n{proc.stdout}\n{proc.stderr}"
+        )
+        assert not out_json.exists()
+        return None
+    assert proc.returncode == 0, f"child failed:\n{proc.stdout}\n{proc.stderr}"
+    return json.loads(out_json.read_text())
+
+
+def test_kill_mid_softpq_resumes_at_stage_and_step(tmp_path):
+    """SIGKILL the pipeline mid-soft-PQ; re-invoking with the same ckpt_dir
+    must resume at the recorded stage/step (never from 0) and converge to a
+    loss byte-identical to an uninterrupted run."""
+    # batch_at call schedule: dense steps 1..8, centroid sample = 9,
+    # soft-PQ steps start at call 10 -> call 16 is soft-PQ step 6 (> one
+    # ckpt_every=3 commit at step 3, plus the step-6 commit racing the kill)
+    ref = _run_child(tmp_path, "ref", -1, tmp_path / "ref_run", expect_kill=False)
+    _run_child(tmp_path, "killed", 16, tmp_path / "kill_run", expect_kill=True)
+
+    # the manifest recorded the mid-flight state
+    manifest = json.loads((tmp_path / "kill_run" / "recipe_run.json").read_text())
+    by_name = {e["name"]: e for e in manifest["stages"]}
+    assert by_name["dense"]["status"] == "done"
+    assert by_name["soft_pq"]["status"] == "running"
+    assert by_name["soft_pq"]["step"] in (3, 6)      # committed checkpoints
+
+    resumed = _run_child(tmp_path, "resumed", -1, tmp_path / "kill_run",
+                         expect_kill=False)
+
+    # regression guard (launch/train.py used to hardcode start_step=0):
+    # nothing re-runs from step 0 — the dense stage is restored (no steps),
+    # and soft-PQ resumes at its committed checkpoint
+    assert resumed["dense_steps"] == []
+    assert resumed["softpq_steps"][0] > 0
+    assert resumed["softpq_steps"][0] == min(resumed["softpq_steps"])
+    assert dict((n, s) for n, s, _ in resumed["stages"])["eval"] == "done"
+
+    # deterministic replay: byte-identical to the uninterrupted run
+    assert float(resumed["softpq_final_loss"]).hex() == \
+        float(ref["softpq_final_loss"]).hex()
+    assert float(resumed["eval_loss"]).hex() == float(ref["eval_loss"]).hex()

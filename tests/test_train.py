@@ -80,6 +80,81 @@ def test_failure_recovery(small_setup, tmp_path):
     assert steps[-1] == 9 and 6 in steps           # recovered and completed
 
 
+def test_retry_exhaustion_restores_and_continues(small_setup, tmp_path):
+    """A persistently failing step exhausts the StepGuard's retries; the
+    trainer must then restore the last committed checkpoint and continue to
+    completion (restore-and-continue), not crash."""
+    arch, data, bundle, params = small_setup
+    opt = AdamW(lr=1e-3)
+    tr = Trainer(
+        step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=10, ckpt_every=4, ckpt_dir=str(tmp_path),
+                          log_every=0, max_retries=1),
+        fail_at=6,
+        fail_times=3,                       # > max_retries + 1: exhausts the guard
+        fail_exc=RuntimeError("persistent transient failure"),
+    )
+    p, _ = tr.fit(params, opt.init(params), start_step=0)
+    steps = [h["step"] for h in tr.history]
+    # guard exhausted at step 6 -> restored to the step-4 checkpoint -> 4, 5
+    # replayed once, then step 6 succeeds on the remaining retry budget
+    assert steps.count(4) == 2 and steps.count(5) == 2
+    assert steps[-1] == 9 and steps.count(6) == 1
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p))
+
+
+def test_retry_exhaustion_without_checkpoint_raises(small_setup, tmp_path):
+    """Nothing committed -> nothing to restore: exhausting the guard before
+    the first checkpoint must re-raise, not replay already-advanced params
+    from step 0 in an infinite loop."""
+    arch, data, bundle, params = small_setup
+    opt = AdamW(lr=1e-3)
+    tr = Trainer(
+        step_fn=jax.jit(make_train_step(bundle, opt, compute_dtype=jnp.float32)),
+        batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=10, ckpt_every=100, ckpt_dir=str(tmp_path),
+                          log_every=0, max_retries=1),
+        fail_at=2,
+        fail_times=99,                   # persistent failure
+        fail_exc=RuntimeError("device lost"),
+    )
+    with pytest.raises(RuntimeError):
+        tr.fit(params, opt.init(params), start_step=0)
+    assert [h["step"] for h in tr.history] == [0, 1]   # no step replayed
+
+
+def test_temperature_metrics_surface_in_history(small_setup, tmp_path):
+    """Learned softmax temperature (t = exp(log_t)) is reported per step for
+    LUT models (t_mean/t_min ~ 1 at init) and absent for dense models."""
+    arch, data, bundle, params = small_setup
+    samples = [data.batch_at(700)]
+    blut, lparams = convert.convert_dense_to_lut_train(
+        bundle, params, samples, jax.random.PRNGKey(3)
+    )
+    frozen = lut_frozen_mask(lparams)
+    opt = AdamW(lr=1e-3, rules=SOFT_PQ_RULES)
+    step = jax.jit(make_train_step(blut, opt, frozen_mask=frozen,
+                                   compute_dtype=jnp.float32))
+    _, _, metrics = step(lparams, opt.init(lparams, frozen), data.batch_at(0))
+    assert 0.9 < float(metrics["t_mean"]) < 1.1       # init_t = 1.0
+    assert float(metrics["t_min"]) <= float(metrics["t_mean"])
+
+    tr = Trainer(
+        step_fn=step, batch_at=data.batch_at,
+        cfg=TrainerConfig(total_steps=2, ckpt_every=100, ckpt_dir=str(tmp_path),
+                          log_every=0),
+    )
+    tr.fit(lparams, opt.init(lparams, frozen), start_step=0)
+    assert all("t_mean" in h and "t_min" in h for h in tr.history)
+
+    # dense models carry no temperature
+    opt_d = AdamW(lr=1e-3)
+    dstep = jax.jit(make_train_step(bundle, opt_d, compute_dtype=jnp.float32))
+    _, _, dmetrics = dstep(params, opt_d.init(params), data.batch_at(0))
+    assert "t_mean" not in dmetrics and "t_min" not in dmetrics
+
+
 def test_straggler_monitor():
     from repro.distributed.fault_tolerance import StragglerMonitor
 
