@@ -1,0 +1,215 @@
+"""Serving robustness under injected faults: availability + latency tails.
+
+Four scenarios over the same tiny LUT_INFER artifact and request load
+(DESIGN.md §11.3):
+
+  * fault_free       — supervised engine, no faults: the baseline row and
+                       the token-parity reference
+  * transient_errors — injected step exceptions absorbed by the in-worker
+                       StepGuard retry (no restart expected)
+  * worker_kill      — the worker is hard-killed mid-load (InjectedKill ->
+                       os._exit); the supervisor restarts from the artifact
+                       and requeues, so availability stays 1.0 at the cost
+                       of the requeued requests' latency
+  * overload_shed    — an unsupervised engine with a tiny bounded queue and
+                       tight deadlines under 4x oversubscription: overload
+                       degrades by shedding low-priority work, not by
+                       growing memory
+
+Each row records availability (= fraction of submitted rids terminal
+"ok" — every rid MUST be terminal, silent loss is an assertion failure),
+latency p50/p99 over the ok requests, terminal-status counts, and
+supervisor restart/requeue counters. The faulty scenarios also assert
+byte-identical token output vs the fault_free row for every request that
+completed without a retry. With `json_path` (benchmarks/run.py --json) the
+rows land in BENCH_faults.json.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+
+import jax
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+from repro.serving.artifact import save_artifact
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultSpec
+from repro.serving.supervisor import EngineSupervisor
+
+N_REQUESTS = 8
+MAX_TOKENS = 8
+ENGINE_KW = dict(n_slots=2, max_seq=64, prefill_chunk=8)
+
+
+def _prompts() -> list[list[int]]:
+    return [[(i * 7 + j) % 256 + 1 for j in range(4 + (i % 5))]
+            for i in range(N_REQUESTS)]
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    idx = min(int(round(q * (len(xs) - 1))), len(xs) - 1)
+    return xs[idx]
+
+
+def _row_from_results(name: str, results: dict, wall_s: float,
+                      extra: dict | None = None) -> dict:
+    statuses = [r["status"] for r in results.values()]
+    assert all(s is not None for s in statuses), f"{name}: silently lost rids"
+    lat = [r["latency_s"] for r in results.values() if r["status"] == "ok"]
+    counts = {s: statuses.count(s) for s in set(statuses)}
+    row = {
+        "scenario": name,
+        "requests": len(results),
+        "availability": round(counts.get("ok", 0) / len(results), 3),
+        "p50_s": round(_percentile(lat, 0.50), 3),
+        "p99_s": round(_percentile(lat, 0.99), 3),
+        "ok": counts.get("ok", 0),
+        "shed": counts.get("shed", 0),
+        "timeout": counts.get("timeout", 0),
+        "error": counts.get("error", 0),
+        "wall_s": round(wall_s, 3),
+    }
+    row.update(extra or {})
+    return row
+
+
+def _run_supervised(artifact: pathlib.Path, name: str,
+                    faults: FaultSpec | None) -> tuple[dict, dict]:
+    sup = EngineSupervisor(
+        artifact, engine_kwargs=ENGINE_KW, faults=faults, retry_budget=2,
+    )
+    try:
+        t0 = time.perf_counter()
+        submit_t: dict[int, float] = {}
+        grids = []
+        for p in _prompts():
+            g = sup.submit({"prompt": p, "max_tokens": MAX_TOKENS})
+            submit_t[g] = time.perf_counter()
+            grids.append(g)
+        results = {}
+        for g in grids:
+            st = sup.wait(g, timeout=600)
+            results[g] = {
+                "status": st.status,
+                "tokens": list(st.tokens),
+                "retries": st.retries,
+                "latency_s": time.perf_counter() - submit_t[g],
+            }
+        wall = time.perf_counter() - t0
+        sstats = sup.stats()
+        extra = {"restarts": sstats.get("restarts", 0),
+                 "requeued": sstats.get("requeued", 0),
+                 "lost": sstats.get("lost", 0)}
+    finally:
+        sup.close()
+    return _row_from_results(name, results, wall, extra), results
+
+
+def _run_overload(bundle, params) -> dict:
+    """Unsupervised engine, tiny bounded queue, 4x oversubscription, tight
+    deadlines on the low-priority half: overload resolves as shed/timeout,
+    never as unbounded queue growth or a hang."""
+    eng = ServingEngine(bundle, params, autotune_lut=False,
+                        max_queue=4, **ENGINE_KW)
+    eng.warmup()
+    t0 = time.perf_counter()
+    rids = []
+    for i in range(4 * N_REQUESTS):
+        rids.append(eng.submit(
+            [(i * 5 + j) % 256 + 1 for j in range(6)],
+            max_tokens=MAX_TOKENS,
+            priority=(1 if i % 2 else 0),
+            # a slice of the surviving high-priority work carries a deadline
+            # tighter than the 2-slot engine can serve it: exercises the
+            # timeout sweep alongside the shed path
+            deadline_s=(0.02 if i % 4 == 1 else 30.0),
+        ))
+    done = {r.rid: r for r in eng.run_until_done(max_steps=10_000)}
+    wall = time.perf_counter() - t0
+    assert set(done) == set(rids), "overload: silently lost rids"
+    results = {
+        rid: {"status": done[rid].status, "tokens": done[rid].out_tokens,
+              "retries": 0, "latency_s": done[rid].latency_s}
+        for rid in rids
+    }
+    st = eng.stats()
+    return _row_from_results(
+        "overload_shed", results, wall,
+        {"queue_high_water": 4, "max_queue_depth_end": st["queue_depth"]},
+    )
+
+
+def main(json_path: str | pathlib.Path | None = None) -> list[dict]:
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2)
+    bundle = build_model(arch, Mode.LUT_INFER)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    rows: list[dict] = []
+    cols = ["scenario", "requests", "availability", "p50_s", "p99_s",
+            "ok", "shed", "timeout", "error", "restarts", "requeued"]
+    print(",".join(cols))
+
+    def emit(row: dict) -> None:
+        rows.append(row)
+        print(",".join(str(row.get(c, "")) for c in cols))
+
+    with tempfile.TemporaryDirectory() as td:
+        artifact = pathlib.Path(td) / "bench_artifact"
+        save_artifact(artifact, bundle, params)
+
+        base_row, base = _run_supervised(artifact, "fault_free", None)
+        emit(base_row)
+
+        # transient step exceptions: absorbed in-worker, zero restarts
+        row, res = _run_supervised(
+            artifact, "transient_errors", FaultSpec(seed=7, error_steps=(2, 9)),
+        )
+        _assert_parity(base, res)
+        emit(row)
+
+        # one hard worker kill mid-run: restart from artifact + requeue
+        row, res = _run_supervised(
+            artifact, "worker_kill", FaultSpec(kill_at_step=4),
+        )
+        _assert_parity(base, res)
+        emit(row)
+
+    emit(_run_overload(bundle, params))
+
+    if json_path is not None:
+        payload = {
+            "schema": "serving_faults.v1",
+            "arch": "qwen3_1p7b(reduced,L=2)",
+            "mode": "lut_infer",
+            "backend": jax.default_backend(),
+            "engine": ENGINE_KW,
+            "rows": rows,
+        }
+        pathlib.Path(json_path).write_text(json.dumps(payload, indent=1))
+        print(f"# wrote {json_path}")
+    return rows
+
+
+def _assert_parity(base: dict, res: dict) -> None:
+    """Non-retried ok requests must be byte-identical to the fault-free
+    run (deterministic sampling survives faults + restarts)."""
+    for g, r in res.items():
+        if r["status"] == "ok" and r["retries"] == 0:
+            assert r["tokens"] == base[g]["tokens"], (
+                f"request {g}: tokens diverged under faults"
+            )
+
+
+if __name__ == "__main__":
+    import sys
+
+    _JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_faults.json"
+    main(json_path=_JSON if "--json" in sys.argv else None)

@@ -27,9 +27,6 @@ import time
 from typing import Any, Callable
 
 
-RETRYABLE = (RuntimeError, jax_err := Exception)  # narrowed below
-
-
 def is_retryable(e: Exception) -> bool:
     """Preemptions / transient device errors are retryable; programming
     errors (TypeError, ValueError from shapes) are not."""
@@ -38,6 +35,26 @@ def is_retryable(e: Exception) -> bool:
     msg = str(e).lower()
     fatal_markers = ("invalid argument", "rank", "incompatible shapes")
     return not any(m in msg for m in fatal_markers)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backoff:
+    """Capped exponential backoff schedule: base * factor^attempt, <= cap.
+
+    Shared restart-delay shape for StepGuard-style retries and the serving
+    supervisor's worker restarts (repro.serving.supervisor)."""
+
+    base_s: float = 0.1
+    factor: float = 2.0
+    cap_s: float = 5.0
+
+    def __post_init__(self) -> None:
+        if self.base_s < 0 or self.factor < 1.0 or self.cap_s < 0:
+            raise ValueError(f"invalid backoff: {self}")
+
+    def delay(self, attempt: int) -> float:
+        """Delay before retry `attempt` (0-based)."""
+        return min(self.base_s * self.factor ** attempt, self.cap_s)
 
 
 @dataclasses.dataclass

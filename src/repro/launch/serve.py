@@ -1,8 +1,16 @@
-"""Serving launcher: batched requests through the continuous-batching engine
-with a LUT_INFER (int8 table) model.
+"""Serving launcher: batch mode (timed request burst) or an HTTP front end
+over the continuous-batching engine with a LUT_INFER (int8 table) model.
 
   # serve a deployed artifact (the output of launch/train.py --lut):
   PYTHONPATH=src python -m repro.launch.serve --artifact /tmp/ckpt_artifact
+
+  # HTTP front end (per-token streaming, /healthz /readyz /metrics,
+  # graceful drain on SIGTERM — DESIGN.md §11.2):
+  PYTHONPATH=src python -m repro.launch.serve --artifact <dir> --port 8000
+
+  # crash-supervised: the engine runs in a worker process restarted from
+  # the artifact on failure (DESIGN.md §11.4):
+  PYTHONPATH=src python -m repro.launch.serve --artifact <dir> --port 8000 --supervise
 
   # tensor-parallel over 2 devices, bfloat16 compute:
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
@@ -11,14 +19,17 @@ with a LUT_INFER (int8 table) model.
   # no artifact: randomly-initialized tables (smoke/perf mode only)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1p7b --requests 8
 
-A warm-up request runs (and is discarded) before the timed region so the
-reported tok/s measures steady state, not the one-off jit compile of the
-two engine shapes.
+In batch mode a warm-up request runs (and is discarded) before the timed
+region so the reported tok/s measures steady state, not the one-off jit
+compile of the two engine shapes. In HTTP mode the process exits 0 on a
+clean drain and `server.EXIT_STRANDED` if the drain deadline expired with
+requests unresolved.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -64,7 +75,45 @@ def main(argv: list[str] | None = None) -> None:
                     help="run LUT sites through the fused Pallas v2 kernel "
                          "(random-init mode; artifacts carry their own "
                          "lut_use_kernel setting)")
+    # random-init reductions (CI / laptop smoke: serve a tiny model)
+    ap.add_argument("--layers", type=int, default=None,
+                    help="random-init mode: reduce the arch to N layers")
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="random-init mode: reduce the arch width")
+    ap.add_argument("--vocab", type=int, default=None,
+                    help="random-init mode: reduce the vocab")
+    # HTTP front end (DESIGN.md §11.2)
+    ap.add_argument("--port", type=int, default=None,
+                    help="start the HTTP front end on this port instead of "
+                         "the batch run (/generate streaming, /healthz, "
+                         "/readyz, /metrics; SIGTERM drains gracefully)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="admission high-water mark: past it the lowest-"
+                         "priority queued request is shed (HTTP mode)")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="seconds SIGTERM waits for in-flight requests "
+                         "before aborting them and exiting non-zero")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the engine in a crash-supervised worker "
+                         "process restarted from the artifact (requires "
+                         "--artifact; DESIGN.md §11.4)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="consecutive worker crashes before the supervisor "
+                         "gives up (with --supervise)")
     args = ap.parse_args(argv)
+
+    if args.supervise and not args.artifact:
+        ap.error("--supervise requires --artifact (the worker restarts "
+                 "from the artifact directory)")
+    if args.supervise and args.port is None:
+        ap.error("--supervise requires --port (supervised batch mode is "
+                 "not wired)")
+    if args.supervise and args.tp > 1:
+        ap.error("--supervise does not support --tp > 1 yet")
+
+    if args.port is not None:
+        return _serve_http(args)
 
     if args.artifact:
         from repro.serving.artifact import load_artifact
@@ -78,7 +127,7 @@ def main(argv: list[str] | None = None) -> None:
         )
         source = f"artifact {args.artifact} ({art.arch_name})"
     else:
-        arch = reduce_arch(get_arch(args.arch), lut_use_kernel=args.use_kernel)
+        arch = _reduced_arch(args)
         bundle = build_model(arch, Mode.LUT_INFER)
         params = bundle.init(jax.random.PRNGKey(0))
         use_kernel = args.use_kernel
@@ -131,6 +180,78 @@ def main(argv: list[str] | None = None) -> None:
           f"shape_cache_hits={st['shape_cache_hits']}")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
+
+
+def _reduced_arch(args):
+    overrides = {"lut_use_kernel": args.use_kernel}
+    if args.layers is not None:
+        overrides["n_layers"] = args.layers
+    if args.d_model is not None:
+        overrides["d_model"] = args.d_model
+    if args.vocab is not None:
+        overrides["vocab"] = args.vocab
+    return reduce_arch(get_arch(args.arch), **overrides)
+
+
+def _serve_http(args) -> None:
+    """HTTP front-end mode: build a backend (local pump or supervised
+    worker), serve until SIGTERM drains it, exit with the drain code."""
+    import asyncio
+
+    from repro.serving.server import EnginePump, run_server
+
+    engine_kwargs = dict(
+        n_slots=args.slots, max_seq=args.max_seq,
+        prefill_chunk=args.prefill_chunk, max_queue=args.max_queue,
+    )
+    if args.supervise:
+        from repro.serving.supervisor import EngineSupervisor
+
+        backend = EngineSupervisor(
+            args.artifact, engine_kwargs=engine_kwargs,
+            max_restarts=args.max_restarts,
+        )
+        if not backend.wait_ready(timeout=600) or not backend.healthy:
+            print("supervised worker failed to come up", file=sys.stderr)
+            sys.exit(1)
+        source = f"supervised artifact {args.artifact}"
+    else:
+        compute_dtype = jnp.bfloat16 if args.dtype == "bfloat16" else jnp.float32
+        if args.artifact:
+            from repro.serving.artifact import load_artifact
+
+            art = load_artifact(args.artifact)
+            bundle, params = art.bundle, art.params
+            source = f"artifact {args.artifact} ({art.arch_name})"
+        else:
+            arch = _reduced_arch(args)
+            bundle = build_model(arch, Mode.LUT_INFER)
+            params = bundle.init(jax.random.PRNGKey(0))
+            source = f"random init ({arch.name})"
+        mesh = None
+        if args.tp > 1:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(data=1, model=args.tp)
+        eng = ServingEngine(
+            bundle, params, compute_dtype=compute_dtype, mesh=mesh,
+            **engine_kwargs,
+        )
+        if not args.no_warmup:
+            eng.warmup()          # compile both engine shapes before /readyz
+        backend = EnginePump(eng)
+
+    def on_started(fe):
+        print(f"serving {source} on http://{fe.host}:{fe.port} "
+              f"({args.slots} slots, max_queue={args.max_queue}; "
+              f"SIGTERM drains, timeout {args.drain_timeout:.0f}s)",
+              flush=True)
+
+    code = asyncio.run(run_server(
+        backend, args.host, args.port,
+        drain_timeout_s=args.drain_timeout, on_started=on_started,
+    ))
+    sys.exit(code)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,15 @@ by batched KV caches. Scheduler state machine (DESIGN.md §6):
 * **Observability** — `stats()` reports prefill/decode token and forward
   counts, wall-clock split, mean decode batch occupancy, and token-shape
   cache hits.
+* **Request lifecycle** (DESIGN.md §11.1) — every request resolves to a
+  terminal `status` in {ok, timeout, cancelled, shed, error}. `submit()`
+  takes a `priority` and a relative `deadline_s`; expired or cancelled
+  requests retire at the top of the next `step()` without burning another
+  forward. With `max_queue` set, admission past the high-water mark sheds
+  the lowest-priority queued request (arrivals lose priority ties) instead
+  of growing the queue without bound. `run_until_done` never silently
+  strands work: exhausting `max_steps` with requests still live raises (or,
+  with `on_exhausted="strand"`, retires them as `error`).
 
 The jitted step is the same `forward_step` the multi-pod dry-run lowers —
 the engine is pure host-side orchestration, so it works identically on
@@ -135,6 +144,11 @@ def warm_lut_autotune(
     return len(tuned)
 
 
+# terminal request statuses (DESIGN.md §11.1); `status` is meaningful only
+# once `done` is True — a live request always reads "ok"
+STATUSES = ("ok", "timeout", "cancelled", "shed", "error")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -142,13 +156,30 @@ class Request:
     max_tokens: int = 16
     eos_id: int | None = None
     sampling: SamplingParams = GREEDY
+    priority: int = 0                  # higher = evicted later under overload
+    deadline: float | None = None      # absolute time.monotonic() deadline
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "ok"
     n_prefilled: int = 0     # prompt tokens already consumed by chunk forwards
+    submit_t: float = 0.0    # time.monotonic() at submit
+    finish_t: float = 0.0    # time.monotonic() at terminal transition
+    cancel_requested: bool = False
 
     @property
     def prefill_done(self) -> bool:
         return self.n_prefilled >= len(self.prompt)
+
+    @property
+    def ok(self) -> bool:
+        return self.done and self.status == "ok"
+
+    @property
+    def latency_s(self) -> float:
+        return max(self.finish_t - self.submit_t, 0.0) if self.done else 0.0
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now >= self.deadline
 
 
 class ServingEngine:
@@ -164,7 +195,11 @@ class ServingEngine:
         autotune_lut: bool = True,
         mesh: Mesh | None = None,
         rules: Any | None = None,
+        max_queue: int | None = None,
+        faults: Any | None = None,
     ):
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue={max_queue} must be >= 1 (or None)")
         if not 1 <= prefill_chunk <= max_seq:
             raise ValueError(
                 f"prefill_chunk={prefill_chunk} must be in [1, max_seq={max_seq}] "
@@ -211,6 +246,8 @@ class ServingEngine:
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
+        self.max_queue = max_queue
+        self.faults = faults                 # FaultInjector hook (§11.3)
         self._next_rid = 0
         self._compute_dtype = compute_dtype
         self.reset_stats()
@@ -262,12 +299,20 @@ class ServingEngine:
             "decode_tokens": 0,
             "decode_s": 0.0,
             "shape_cache_hits": 0,        # forwards that reused a seen token shape
+            # terminal-status counters (DESIGN.md §11.1)
+            "completed": 0,               # retired with status "ok"
+            "timeout": 0,
+            "cancelled": 0,
+            "shed": 0,
+            "error": 0,
         }
         self._shapes_seen: set[tuple[int, int]] = set()
 
     def stats(self) -> dict[str, Any]:
         """Scheduler counters since construction / the last reset_stats()."""
         c = dict(self._counters)
+        c["queue_depth"] = len(self.queue)
+        c["active_slots"] = sum(s is not None for s in self.slots)
         dec_f = c["decode_forwards"]
         # each decode forward advances one token per active slot, so tokens
         # per forward IS the occupancy
@@ -305,7 +350,19 @@ class ServingEngine:
         max_tokens: int = 16,
         eos_id: int | None = None,
         sampling: SamplingParams | None = None,
+        priority: int = 0,
+        deadline_s: float | None = None,
     ) -> int:
+        """Queue a request; returns its rid.
+
+        `deadline_s` is relative (seconds from now); a request past its
+        deadline retires with status "timeout" — queued or mid-generation —
+        at the top of the next step, without burning further forwards.
+        `priority` orders both admission (higher first) and overload
+        shedding (lower evicted first). A request shed at submit time STILL
+        gets a rid: it lands in `finished` with status "shed" immediately,
+        so every rid ever returned resolves to a terminal status.
+        """
         prompt = list(prompt) or [0]
         # chunk padding writes cache rows up to the padded length, so the
         # PADDED prompt must fit — an over-long prompt would otherwise have
@@ -321,24 +378,93 @@ class ServingEngine:
         # decode writes positions len(prompt) .. len(prompt)+max_tokens-2
         # (the final token is sampled but never fed back): cap to the cache
         max_tokens = min(max_tokens, self.max_seq - len(prompt) + 1)
+        now = time.monotonic()
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(
-            Request(rid, prompt, max_tokens, eos_id, sampling or GREEDY)
+        req = Request(
+            rid, prompt, max_tokens, eos_id, sampling or GREEDY,
+            priority=priority,
+            deadline=None if deadline_s is None else now + deadline_s,
         )
+        req.submit_t = now
+        # bounded queue (DESIGN.md §11.2): past the high-water mark, shed
+        # the lowest-priority request — the newest among ties, so older
+        # work at equal priority keeps its place and arrivals lose ties
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self._sweep_queue(now)           # expired entries free space first
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            victim = min(reversed(self.queue), key=lambda r: r.priority)
+            if victim.priority >= req.priority:
+                self._finish_queued(req, "shed")
+                return rid
+            self.queue.remove(victim)
+            self._finish_queued(victim, "shed")
+        self.queue.append(req)
         return rid
 
+    def cancel(self, rid: int) -> bool:
+        """Cancel a live (queued or in-flight) request.
+
+        Retires it immediately with status "cancelled" (partial out_tokens
+        kept). Returns False when the rid is unknown or already terminal.
+        Single-threaded like every engine call — front ends route cancels
+        through the thread that owns the engine.
+        """
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                self._finish_queued(req, "cancelled")
+                return True
+        for i, req in enumerate(self.slots):
+            if req is not None and req.rid == rid:
+                req.cancel_requested = True
+                self._retire(i, req, "cancelled")
+                return True
+        return False
+
+    def _finish_queued(self, req: Request, status: str) -> None:
+        """Terminal transition for a request that never held a slot."""
+        req.done = True
+        req.status = status
+        req.finish_t = time.monotonic()
+        self._counters[status if status != "ok" else "completed"] += 1
+        self.finished.append(req)
+
+    def _sweep_queue(self, now: float) -> None:
+        expired = [r for r in self.queue if r.expired(now)]
+        for req in expired:
+            self.queue.remove(req)
+            self._finish_queued(req, "timeout")
+
+    def _sweep(self) -> None:
+        """Retire deadline-expired and cancelled requests — queued and
+        in-flight alike — before any forward is issued this step."""
+        now = time.monotonic()
+        self._sweep_queue(now)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if req.cancel_requested:
+                self._retire(i, req, "cancelled")
+            elif req.expired(now):
+                self._retire(i, req, "timeout")
+
     def _admit(self) -> None:
-        """Fill free slots from the queue. Pure bookkeeping — the admitted
-        slots' prompts are consumed by the shared chunk forward in step()."""
+        """Fill free slots from the queue, highest priority first (FIFO
+        within a priority level). Pure bookkeeping — the admitted slots'
+        prompts are consumed by the shared chunk forward in step()."""
         for i in range(self.n_slots):
             if self.slots[i] is None and self.queue:
-                req = self.queue.popleft()
+                req = max(self.queue, key=lambda r: (r.priority, -r.rid))
+                self.queue.remove(req)
                 self.slots[i] = req
                 self.cache_len[i] = 0
 
-    def _retire(self, slot: int, req: Request) -> None:
+    def _retire(self, slot: int, req: Request, status: str = "ok") -> None:
         req.done = True
+        req.status = status
+        req.finish_t = time.monotonic()
+        self._counters[status if status != "ok" else "completed"] += 1
         self.finished.append(req)
         self.slots[slot] = None
         self.cache_len[slot] = 0
@@ -463,19 +589,156 @@ class ServingEngine:
             self._check_done_after_token(i, r, tok)
 
     def step(self) -> None:
-        """One engine step: admit, one prefill chunk, one decode forward.
+        """One engine step: fault hook, lifecycle sweep, admit, one prefill
+        chunk, one decode forward.
 
         Prefill consumes at most one chunk per step so long prompts cannot
         starve the decode of already-active slots (bounded decode latency).
+        The sweep runs before admission so expired/cancelled requests never
+        consume a forward, and a freed slot is re-admitted the same step.
         """
+        if self.faults is not None:
+            self.faults.on_step()        # may sleep, or raise Injected{Fault,Kill}
         self._counters["steps"] += 1
+        self._sweep()
         self._admit()
         self._prefill_step()
         self._decode_step()
 
-    def run_until_done(self, max_steps: int = 1000) -> list[Request]:
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def run_until_done(
+        self, max_steps: int = 1000, *, on_exhausted: str = "raise"
+    ) -> list[Request]:
+        """Step until all requests are terminal, or `max_steps` is spent.
+
+        Exhausting `max_steps` with requests still live is a scheduler bug
+        or an undersized budget — never silent: `on_exhausted="raise"` (the
+        default) raises RuntimeError naming the stranded rids;
+        `"strand"` retires them with status "error" and returns, so every
+        rid still resolves to a terminal status.
+        """
+        if on_exhausted not in ("raise", "strand"):
+            raise ValueError(f"on_exhausted={on_exhausted!r}")
         for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
+            if not self.has_work():
                 break
             self.step()
+        if self.has_work():
+            stranded = [r.rid for r in self.queue] + [
+                r.rid for r in self.slots if r is not None
+            ]
+            if on_exhausted == "raise":
+                raise RuntimeError(
+                    f"run_until_done exhausted max_steps={max_steps} with "
+                    f"{len(stranded)} request(s) still live: rids {stranded}"
+                )
+            self.abort_all("error")
         return self.finished
+
+    def abort_all(self, status: str = "error") -> list[Request]:
+        """Retire every live request with a terminal `status` (no forward).
+
+        Used by front ends when the engine itself dies (status "error") and
+        by `run_until_done(on_exhausted="strand")`. Returns the aborted
+        requests.
+        """
+        aborted = []
+        while self.queue:
+            req = self.queue.popleft()
+            self._finish_queued(req, status)
+            aborted.append(req)
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                self._retire(i, req, status)
+                aborted.append(req)
+        return aborted
+
+
+# keys a front-end request spec may carry (HTTP body / supervisor wire format)
+SPEC_KEYS = frozenset({
+    "prompt", "max_tokens", "eos_id", "priority", "deadline_s",
+    "temperature", "top_k", "top_p", "seed",
+})
+
+
+def submit_from_spec(engine: "ServingEngine", spec: dict[str, Any]) -> int:
+    """Submit a front-end request spec (a plain JSON-safe dict, SPEC_KEYS)
+    to an engine. Shared by the HTTP server's pump and the supervised
+    worker so both sides of the process boundary speak one format."""
+    unknown = set(spec) - SPEC_KEYS
+    if unknown:
+        raise ValueError(f"unknown request fields: {sorted(unknown)}")
+    prompt = spec.get("prompt")
+    if not isinstance(prompt, (list, tuple)) or not all(
+        isinstance(t, int) and not isinstance(t, bool) for t in prompt
+    ):
+        raise ValueError("prompt must be a list of ints")
+    sampling = None
+    if any(k in spec for k in ("temperature", "top_k", "top_p", "seed")):
+        sampling = SamplingParams(
+            temperature=float(spec.get("temperature", 0.0)),
+            top_k=int(spec.get("top_k", 0)),
+            top_p=float(spec.get("top_p", 1.0)),
+            seed=int(spec.get("seed", 0)),
+        )
+    return engine.submit(
+        list(prompt),
+        max_tokens=int(spec.get("max_tokens", 16)),
+        eos_id=spec.get("eos_id"),
+        sampling=sampling,
+        priority=int(spec.get("priority", 0)),
+        deadline_s=spec.get("deadline_s"),
+    )
+
+
+class TokenTap:
+    """Incremental observer of an engine's token output.
+
+    Front ends (the HTTP server's pump thread, the supervised worker) call
+    `poll()` after each `step()`; it diffs per-request `out_tokens` against
+    what was already reported and returns
+    `(token_events, finished_requests)` where `token_events` is a list of
+    `(rid, new_tokens)` — including the final tokens of requests that
+    retired this step, before their entry in `finished_requests`.
+
+    With `consume=True`, reported entries are removed from
+    `engine.finished` so a long-running server's memory stays bounded;
+    leave it False when other code (e.g. `run_until_done`'s return) still
+    reads the list.
+    """
+
+    def __init__(self, engine: "ServingEngine", *, consume: bool = False):
+        self.engine = engine
+        self.consume = consume
+        self._emitted: dict[int, int] = {}
+        self._drained = 0                 # index into engine.finished
+
+    def _new_tokens(self, req: Request) -> list[int]:
+        seen = self._emitted.get(req.rid, 0)
+        fresh = req.out_tokens[seen:]
+        if fresh:
+            self._emitted[req.rid] = seen + len(fresh)
+        return fresh
+
+    def poll(self) -> tuple[list[tuple[int, list[int]]], list[Request]]:
+        tokens: list[tuple[int, list[int]]] = []
+        fin = self.engine.finished
+        done = fin[self._drained:]
+        for req in done:
+            fresh = self._new_tokens(req)
+            if fresh:
+                tokens.append((req.rid, fresh))
+            self._emitted.pop(req.rid, None)
+        if self.consume:
+            del fin[self._drained:]
+        else:
+            self._drained = len(fin)
+        for req in self.engine.slots:
+            if req is None:
+                continue
+            fresh = self._new_tokens(req)
+            if fresh:
+                tokens.append((req.rid, fresh))
+        return tokens, done

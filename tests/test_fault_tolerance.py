@@ -1,0 +1,160 @@
+"""Unit tests for distributed.fault_tolerance: StragglerMonitor EMA/flagging,
+HeartbeatFile contents, Backoff schedule, StepGuard retry classification."""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.distributed.fault_tolerance import (
+    Backoff,
+    HeartbeatFile,
+    StepGuard,
+    StragglerMonitor,
+    is_retryable,
+)
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+class TestStragglerMonitor:
+    def test_warmup_never_flags(self):
+        mon = StragglerMonitor(threshold=1.01, warmup_steps=5)
+        # grossly slow steps inside warmup must not flag: the EMA is still
+        # calibrating and has no baseline to compare against
+        for step in range(5):
+            assert mon.record(step, 100.0 * (step + 1)) is False
+        assert mon.events == []
+
+    def test_warmup_seeds_ema(self):
+        mon = StragglerMonitor(decay=0.9, warmup_steps=3)
+        mon.record(0, 2.0)
+        assert mon.ema == pytest.approx(2.0)   # first sample seeds directly
+        mon.record(1, 4.0)
+        assert mon.ema == pytest.approx(0.9 * 2.0 + 0.1 * 4.0)
+
+    def test_flags_above_threshold(self):
+        mon = StragglerMonitor(threshold=2.0, decay=0.9, warmup_steps=2)
+        for step in range(2):
+            mon.record(step, 1.0)
+        ema = mon.ema
+        assert mon.record(2, 2.0 * ema + 0.01) is True
+        assert len(mon.events) == 1
+        ev = mon.events[0]
+        assert ev["step"] == 2 and ev["ema"] == pytest.approx(ema)
+
+    def test_straggler_does_not_poison_ema(self):
+        mon = StragglerMonitor(threshold=2.0, decay=0.9, warmup_steps=2)
+        for step in range(2):
+            mon.record(step, 1.0)
+        ema = mon.ema
+        mon.record(2, 100.0)                   # flagged -> EMA unchanged
+        assert mon.ema == pytest.approx(ema)
+        assert mon.record(3, 1.0) is False     # normal step still normal
+
+    def test_normal_steps_track_ema(self):
+        mon = StragglerMonitor(threshold=2.0, decay=0.5, warmup_steps=1)
+        mon.record(0, 1.0)
+        mon.record(1, 1.5)                     # below threshold: folded in
+        assert mon.ema == pytest.approx(0.5 * 1.0 + 0.5 * 1.5)
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatFile
+# ---------------------------------------------------------------------------
+
+class TestHeartbeatFile:
+    def test_beat_writes_one_json_record(self, tmp_path):
+        hb = HeartbeatFile(tmp_path / "hb.json")
+        hb.beat(3)
+        lines = (tmp_path / "hb.json").read_text().splitlines()
+        assert len(lines) == 1                 # liveness breadcrumb, not a log
+        rec = json.loads(lines[0])
+        assert rec["step"] == 3 and rec["t"] > 0
+
+    def test_beat_overwrites_with_latest(self, tmp_path):
+        hb = HeartbeatFile(tmp_path / "hb.json")
+        for step in range(4):
+            hb.beat(step)
+        lines = (tmp_path / "hb.json").read_text().splitlines()
+        assert len(lines) == 1
+        assert json.loads(lines[0])["step"] == 3
+
+    def test_extra_fields_round_trip(self, tmp_path):
+        hb = HeartbeatFile(tmp_path / "hb.json")
+        hb.beat(7, loss=0.5, phase="distill")
+        rec = json.loads((tmp_path / "hb.json").read_text())
+        assert rec["loss"] == 0.5 and rec["phase"] == "distill"
+
+    def test_creates_parent_dirs(self, tmp_path):
+        hb = HeartbeatFile(tmp_path / "a" / "b" / "hb.json")
+        hb.beat(0)
+        assert hb.path.exists()
+
+
+# ---------------------------------------------------------------------------
+# Backoff
+# ---------------------------------------------------------------------------
+
+class TestBackoff:
+    def test_exponential_then_capped(self):
+        b = Backoff(base_s=0.1, factor=2.0, cap_s=1.0)
+        assert b.delay(0) == pytest.approx(0.1)
+        assert b.delay(1) == pytest.approx(0.2)
+        assert b.delay(2) == pytest.approx(0.4)
+        assert b.delay(10) == 1.0              # capped
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Backoff(base_s=-1.0)
+        with pytest.raises(ValueError):
+            Backoff(factor=0.5)
+        with pytest.raises(ValueError):
+            Backoff(cap_s=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# StepGuard + is_retryable
+# ---------------------------------------------------------------------------
+
+class TestStepGuard:
+    def test_transient_error_retries_then_succeeds(self):
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise RuntimeError("transient device error")
+            return "ok"
+
+        seen = []
+        guard = StepGuard(max_retries=2,
+                          on_failure=lambda e, a: seen.append(a))
+        assert guard.run(flaky) == "ok"
+        assert calls["n"] == 3 and seen == [0, 1]
+
+    def test_fatal_error_raises_immediately(self):
+        calls = {"n": 0}
+
+        def broken():
+            calls["n"] += 1
+            raise ValueError("incompatible shapes")
+
+        with pytest.raises(ValueError):
+            StepGuard(max_retries=5).run(broken)
+        assert calls["n"] == 1                 # no retry on programming errors
+
+    def test_exhausted_retries_raise_runtime_error(self):
+        def always():
+            raise RuntimeError("flaky forever")
+
+        with pytest.raises(RuntimeError, match="after 2 attempts"):
+            StepGuard(max_retries=1).run(always)
+
+    def test_is_retryable_classification(self):
+        assert is_retryable(RuntimeError("connection reset"))
+        assert not is_retryable(TypeError("bad arg"))
+        assert not is_retryable(RuntimeError("invalid argument: rank"))

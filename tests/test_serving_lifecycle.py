@@ -1,0 +1,294 @@
+"""Request lifecycle (DESIGN.md §11.1): deadlines, priorities, cancellation,
+bounded-queue shedding, stranded-work detection, TokenTap, fault injection."""
+
+import time
+
+import jax
+import pytest
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+from repro.serving.engine import ServingEngine, TokenTap, submit_from_spec
+from repro.serving.faults import (
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    InjectedKill,
+)
+
+
+@pytest.fixture(scope="module")
+def small():
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=1)
+    bundle = build_model(arch, Mode.DENSE)
+    return bundle, bundle.init(jax.random.PRNGKey(0))
+
+
+def _engine(small, **kw):
+    bundle, params = small
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("autotune_lut", False)
+    return ServingEngine(bundle, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_expired_queued_request_times_out(small):
+    eng = _engine(small)
+    rid_dead = eng.submit([1, 2, 3], max_tokens=4, deadline_s=0.0)
+    rid_live = eng.submit([4, 5, 6], max_tokens=4)
+    done = {r.rid: r for r in eng.run_until_done()}
+    assert done[rid_dead].status == "timeout"
+    assert done[rid_dead].out_tokens == []        # never burned a forward
+    assert done[rid_live].status == "ok"
+    assert eng.stats()["timeout"] == 1
+
+
+def test_inflight_deadline_keeps_partial_output(small):
+    eng = _engine(small, n_slots=1)
+    rid = eng.submit([1, 2, 3], max_tokens=50, deadline_s=60.0)
+    eng.step()                                    # admit + prefill: 1 token out
+    req = eng.slots[0]
+    assert req is not None and req.rid == rid
+    req.deadline = time.monotonic() - 1.0         # force expiry mid-decode
+    eng.step()                                    # sweep retires before forward
+    assert req.done and req.status == "timeout"
+    assert len(req.out_tokens) >= 1               # partial output preserved
+    assert not req.ok
+    assert req.latency_s > 0
+
+
+# ---------------------------------------------------------------------------
+# priorities + bounded-queue shedding
+# ---------------------------------------------------------------------------
+
+def test_priority_admission_order(small):
+    eng = _engine(small, n_slots=1)
+    lo = eng.submit([1, 2], max_tokens=1, priority=0)
+    hi = eng.submit([3, 4], max_tokens=1, priority=5)
+    done = eng.run_until_done()
+    assert [r.rid for r in done] == [hi, lo]      # high priority served first
+
+
+def test_fifo_within_priority(small):
+    eng = _engine(small, n_slots=1)
+    rids = [eng.submit([i + 1, i + 2], max_tokens=1) for i in range(3)]
+    done = eng.run_until_done()
+    assert [r.rid for r in done] == rids          # equal priority: FIFO
+
+
+def test_shed_evicts_lowest_priority_newest(small):
+    eng = _engine(small, max_queue=2)
+    r0 = eng.submit([1], max_tokens=1, priority=0)
+    r1 = eng.submit([2], max_tokens=1, priority=0)
+    # queue full: a higher-priority arrival evicts the NEWEST equal-lowest
+    r2 = eng.submit([3], max_tokens=1, priority=1)
+    assert [r.rid for r in eng.queue] == [r0, r2]
+    shed = eng.finished[-1]
+    assert shed.rid == r1 and shed.status == "shed" and shed.done
+    # an arrival that does not beat the floor priority is itself shed
+    r3 = eng.submit([4], max_tokens=1, priority=0)
+    assert eng.finished[-1].rid == r3
+    assert eng.finished[-1].status == "shed"
+    assert eng.stats()["shed"] == 2
+    done = {r.rid: r for r in eng.run_until_done()}
+    assert done[r0].ok and done[r2].ok            # survivors complete
+
+
+def test_expired_entries_swept_before_shedding(small):
+    eng = _engine(small, max_queue=1)
+    r0 = eng.submit([1, 2], max_tokens=1, deadline_s=0.0)
+    r1 = eng.submit([3, 4], max_tokens=1)         # sweep frees the slot: no shed
+    assert [r.rid for r in eng.queue] == [r1]
+    done = {r.rid: r for r in eng.run_until_done()}
+    assert done[r0].status == "timeout"
+    assert done[r1].status == "ok"
+    assert eng.stats()["shed"] == 0
+
+
+def test_max_queue_validation(small):
+    with pytest.raises(ValueError):
+        _engine(small, max_queue=0)
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_inflight(small):
+    eng = _engine(small, n_slots=1)
+    r0 = eng.submit([1, 2, 3], max_tokens=30)
+    r1 = eng.submit([4, 5, 6], max_tokens=30)
+    assert eng.cancel(r1) is True                 # still queued
+    eng.step()                                    # r0 admitted
+    assert eng.cancel(r0) is True                 # mid-flight
+    assert eng.cancel(r0) is False                # already terminal
+    assert eng.cancel(999) is False               # unknown rid
+    done = {r.rid: r for r in eng.run_until_done()}
+    assert done[r0].status == done[r1].status == "cancelled"
+    assert done[r1].out_tokens == []
+    assert eng.stats()["cancelled"] == 2
+
+
+# ---------------------------------------------------------------------------
+# stranded work is never silent
+# ---------------------------------------------------------------------------
+
+def test_run_until_done_raises_on_exhaustion(small):
+    eng = _engine(small, n_slots=1)
+    r0 = eng.submit([1, 2, 3], max_tokens=30)
+    r1 = eng.submit([4, 5, 6], max_tokens=30)
+    with pytest.raises(RuntimeError, match="2 request\\(s\\) still live") as ei:
+        eng.run_until_done(max_steps=1)
+    assert str(r0) in str(ei.value) and str(r1) in str(ei.value)
+    # the engine is still coherent: finishing the work afterwards is fine
+    done = {r.rid: r for r in eng.run_until_done()}
+    assert done[r0].ok and done[r1].ok
+
+
+def test_run_until_done_strand_mode(small):
+    eng = _engine(small, n_slots=1)
+    r0 = eng.submit([1, 2, 3], max_tokens=30)
+    r1 = eng.submit([4, 5, 6], max_tokens=30)
+    done = {r.rid: r for r in eng.run_until_done(max_steps=1, on_exhausted="strand")}
+    assert done[r0].status == "error" and done[r1].status == "error"
+    assert not eng.has_work()
+    assert eng.stats()["error"] == 2
+    with pytest.raises(ValueError):
+        eng.run_until_done(on_exhausted="panic")
+
+
+def test_abort_all(small):
+    eng = _engine(small, n_slots=1)
+    rids = [eng.submit([i + 1, i + 2], max_tokens=30) for i in range(3)]
+    eng.step()
+    aborted = eng.abort_all("error")
+    assert sorted(r.rid for r in aborted) == rids
+    assert all(r.status == "error" for r in aborted)
+    assert not eng.has_work()
+
+
+# ---------------------------------------------------------------------------
+# spec wire format (HTTP body / supervisor pipe)
+# ---------------------------------------------------------------------------
+
+def test_submit_from_spec_validation(small):
+    eng = _engine(small)
+    with pytest.raises(ValueError, match="unknown request fields"):
+        submit_from_spec(eng, {"prompt": [1], "banana": 1})
+    with pytest.raises(ValueError, match="list of ints"):
+        submit_from_spec(eng, {"prompt": "not tokens"})
+    with pytest.raises(ValueError, match="list of ints"):
+        submit_from_spec(eng, {"prompt": [1, True, 3]})   # bools are not tokens
+    rid = submit_from_spec(
+        eng, {"prompt": [1, 2, 3], "max_tokens": 2, "priority": 1,
+              "temperature": 0.7, "seed": 9},
+    )
+    done = {r.rid: r for r in eng.run_until_done()}
+    assert done[rid].ok and len(done[rid].out_tokens) == 2
+
+
+# ---------------------------------------------------------------------------
+# TokenTap
+# ---------------------------------------------------------------------------
+
+def test_token_tap_incremental_and_consume(small):
+    eng = _engine(small, n_slots=2)
+    tap = TokenTap(eng, consume=True)
+    r0 = eng.submit([1, 2, 3], max_tokens=4)
+    r1 = eng.submit([4, 5], max_tokens=2)
+    streamed: dict[int, list[int]] = {r0: [], r1: []}
+    finals = {}
+    for _ in range(50):
+        if not eng.has_work():
+            break
+        eng.step()
+        tokens, done = tap.poll()
+        for rid, toks in tokens:
+            streamed[rid].extend(toks)
+        for req in done:
+            finals[req.rid] = req
+    # every token surfaced exactly once, in order, and finished is drained
+    assert streamed[r0] == finals[r0].out_tokens
+    assert streamed[r1] == finals[r1].out_tokens
+    assert eng.finished == []                     # consume=True bounds memory
+    assert tap.poll() == ([], [])                 # nothing new after quiesce
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_round_trip_and_validation():
+    spec = FaultSpec(seed=3, spike_p=0.5, error_steps=(1, 4), kill_at_step=9)
+    assert FaultSpec.from_dict(spec.to_dict()) == spec
+    assert spec.active
+    assert not FaultSpec().active
+    with pytest.raises(ValueError):
+        FaultSpec(error_p=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(spike_s=-1.0)
+
+
+def test_injector_deterministic_and_counts():
+    a = FaultInjector(FaultSpec(seed=5, error_p=0.3), sleep=lambda s: None)
+    b = FaultInjector(FaultSpec(seed=5, error_p=0.3), sleep=lambda s: None)
+    for inj in (a, b):
+        for _ in range(30):
+            try:
+                inj.on_step()
+            except InjectedFault:
+                pass
+    assert a.events == b.events                   # same seed => same schedule
+    assert a.counts()["error"] == len(a.events) > 0
+
+
+def test_injector_kill_is_base_exception():
+    inj = FaultInjector(FaultSpec(kill_at_step=0))
+    with pytest.raises(InjectedKill):
+        try:
+            inj.on_step()
+        except Exception:                         # must NOT absorb a kill
+            pytest.fail("InjectedKill was caught by `except Exception`")
+    assert inj.counts()["kill"] == 1
+
+
+def test_injector_spike_sleeps():
+    slept = []
+    inj = FaultInjector(FaultSpec(spike_p=1.0, spike_s=0.5),
+                        sleep=slept.append)
+    inj.on_step()
+    assert slept == [0.5]
+
+
+def test_retried_call_advances_past_transient_fault():
+    """A retry draws the NEXT call index, so an explicit one-step fault
+    fails once and then passes — the transient-fault contract StepGuard
+    relies on."""
+    inj = FaultInjector(FaultSpec(error_steps=(0,)))
+    with pytest.raises(InjectedFault):
+        inj.on_step()
+    inj.on_step()                                 # retry: clean
+
+
+def test_engine_resumes_after_injected_fault(small):
+    """A step fault surfaces to the caller, and the engine completes the
+    request with the SAME tokens as a fault-free run once stepping resumes."""
+    bundle, params = small
+    ref_eng = _engine(small, n_slots=1)
+    ref_eng.submit([1, 2, 3], max_tokens=4)
+    ref = ref_eng.run_until_done()[0].out_tokens
+
+    eng = _engine(small, n_slots=1)
+    eng.faults = FaultInjector(FaultSpec(error_steps=(1,)))
+    rid = eng.submit([1, 2, 3], max_tokens=4)
+    eng.step()                                    # call 0: clean
+    with pytest.raises(InjectedFault):
+        eng.step()                                # call 1: injected, no forward
+    done = {r.rid: r for r in eng.run_until_done()}
+    assert done[rid].ok
+    assert done[rid].out_tokens == ref
