@@ -1,0 +1,142 @@
+"""Perf-counter regression gate: re-run the serving benchmarks and diff
+their deterministic counters against the committed BENCH_*.json files.
+
+  PYTHONPATH=src python -m benchmarks.check_regression              # run + diff
+  PYTHONPATH=src python -m benchmarks.check_regression --fresh-dir D # diff only
+
+The serving scheduler is single-threaded and its counters (steps, prefill
+forwards/tokens, pages resident, prefix hits, COW copies, ...) are pure
+functions of the request trace — any drift is a behavior change, not noise,
+so those keys are compared EXACTLY. Wall-clock-derived keys (tok/s, *_s)
+are machine noise and skipped. The fault-injection rows sit in between:
+sleeps and deadlines make shed/timeout splits timing-sensitive, so their
+status counts get absolute tolerances instead of exact equality.
+
+Exit code 0 = no regression; 1 = drift (each offending key printed).
+A committed row missing from the fresh run fails, except rows listed as
+best-effort (the tp2 subprocess row); NEW fresh rows/keys are reported but
+do not fail — committing the fresh file is the upgrade path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# keys never compared: wall-clock and rates derived from it
+_TIMING = ("wall_s", "prefill_tok_s", "decode_tok_s", "p50_s", "p99_s")
+
+# per-file rules: how rows are keyed, which module regenerates them, which
+# keys are timing-tolerant (abs tolerance), which rows may be absent fresh
+RULES = {
+    "BENCH_serving.json": {
+        "module": "serving_bench",
+        "row_key": "load",
+        "tol_abs": {},                       # everything non-timing is exact
+        "optional_rows": {"tp2_12req"},      # subprocess row is best-effort
+    },
+    "BENCH_faults.json": {
+        "module": "serving_faults",
+        "row_key": "scenario",
+        "tol_abs": {
+            "availability": 0.25,            # shed/timeout splits move with
+            "ok": 2, "shed": 2, "timeout": 2, "error": 2,  # machine speed
+            "restarts": 1, "requeued": 8,
+        },
+        "optional_rows": set(),
+    },
+}
+
+
+def _index(payload: dict, row_key: str) -> dict[str, dict]:
+    return {r[row_key]: r for r in payload["rows"]}
+
+
+def _diff_rows(name: str, old: dict, new: dict, tol_abs: dict) -> list[str]:
+    bad = []
+    for k, want in old.items():
+        if k in _TIMING or not isinstance(want, (int, float)) or isinstance(want, bool):
+            continue
+        got = new.get(k)
+        if got is None:
+            bad.append(f"{name}.{k}: committed {want}, missing from fresh run")
+            continue
+        tol = tol_abs.get(k, 0)
+        # floats that are deterministic ratios (occupancy, hit rate) still
+        # compare exactly up to float noise
+        limit = tol if tol else (1e-9 if isinstance(want, float) else 0)
+        if abs(got - want) > limit:
+            bad.append(f"{name}.{k}: committed {want}, fresh {got}"
+                       + (f" (tol ±{tol})" if tol else ""))
+    return bad
+
+
+def check_file(committed: pathlib.Path, fresh: pathlib.Path, rules: dict) -> list[str]:
+    old = json.loads(committed.read_text())
+    new = json.loads(fresh.read_text())
+    if old.get("schema") != new.get("schema"):
+        return [f"{committed.name}: schema {old.get('schema')!r} != "
+                f"fresh {new.get('schema')!r} — re-commit the artifact"]
+    bad = []
+    old_rows, new_rows = _index(old, rules["row_key"]), _index(new, rules["row_key"])
+    for rid, row in old_rows.items():
+        if rid not in new_rows:
+            msg = f"{committed.name}[{rid}]: row missing from fresh run"
+            if rid in rules["optional_rows"]:
+                print(f"# warn (best-effort row): {msg}")
+            else:
+                bad.append(msg)
+            continue
+        bad += _diff_rows(f"{committed.name}[{rid}]", row, new_rows[rid],
+                          rules["tol_abs"])
+    for rid in new_rows.keys() - old_rows.keys():
+        print(f"# new row not in committed file: {committed.name}[{rid}]")
+    return bad
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default=None,
+                    help="directory holding freshly-generated BENCH_*.json; "
+                         "default: re-run the bench modules into a tempdir")
+    ap.add_argument("--only", choices=sorted(RULES), action="append",
+                    help="check just this artifact (repeatable)")
+    args = ap.parse_args(argv)
+    names = args.only or sorted(RULES)
+
+    with tempfile.TemporaryDirectory() as td:
+        fresh_dir = pathlib.Path(args.fresh_dir or td)
+        failures = []
+        for name in names:
+            committed = _ROOT / name
+            if not committed.exists():
+                failures.append(f"{name}: no committed baseline at {committed}")
+                continue
+            fresh = fresh_dir / name
+            if args.fresh_dir is None:
+                mod = __import__(f"benchmarks.{RULES[name]['module']}",
+                                 fromlist=["main"])
+                print(f"# regenerating {name} via benchmarks."
+                      f"{RULES[name]['module']} ...")
+                mod.main(json_path=fresh)
+            if not fresh.exists():
+                failures.append(f"{name}: fresh artifact missing at {fresh}")
+                continue
+            failures += check_file(committed, fresh, RULES[name])
+
+    if failures:
+        print(f"\nREGRESSION: {len(failures)} drifted counter(s)")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\nno counter drift across {', '.join(names)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

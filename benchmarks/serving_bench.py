@@ -9,6 +9,12 @@ occupancy through the LUT_INFER int8-table model, across four configs:
   * tp2_12req — heavy load on a (1, 2) ("data", "model") mesh in a
     subprocess with 2 forced host devices (the tests/_subproc.py pattern),
     measuring the tensor-parallel engine path end to end
+  * prefix_chat_{shared,nosharing}_8req — the paged-KV chat pattern
+    (DESIGN.md §12): a primer request warms the prefix cache, then 8
+    requests share a 32-token system prompt. The shared row must beat the
+    no-sharing row on prefill forwards (pages skip prefill), and its KV
+    bytes resident must sit strictly below the dense per-slot footprint —
+    both asserted here so the bench doubles as a perf regression gate.
 
 A warm-up request compiles the engine's two token shapes off the clock, so
 the rows measure steady-state scheduler throughput, not jit. With
@@ -41,6 +47,10 @@ MAX_TOKENS = 8
 # requests queue behind busy slots)
 LOADS = [("light_2req", 2), ("heavy_12req", 12)]
 _TP2_MARKER = "TP2_ROW "
+# prefix-heavy chat scenario: 8 requests share a 4-page system prompt
+PAGE_SIZE = 8
+SYS_PROMPT = [(j * 5) % 256 + 1 for j in range(32)]       # 4 full pages
+N_CHAT = 8
 
 
 def _run_load(bundle, params, n_requests: int, *, mesh=None) -> dict:
@@ -79,6 +89,67 @@ def _run_load(bundle, params, n_requests: int, *, mesh=None) -> dict:
         "decode_occupancy": round(st["decode_occupancy"], 3),
         "shape_cache_hits": st["shape_cache_hits"],
         "wall_s": round(wall_s, 3),
+    }
+
+
+def _prefix_chat_row(bundle, params, *, sharing: bool) -> dict:
+    """Paged engine under the chat pattern. A primer request registers the
+    system prompt's pages, then the timed burst: N requests with distinct
+    tails plus one verbatim resubmit of the system prompt (fully cached —
+    exercises the final-token clamp and copy-on-write)."""
+    eng = ServingEngine(
+        bundle, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+        prefill_chunk=PREFILL_CHUNK, compute_dtype=jnp.float32,
+        autotune_lut=False, paged=True, page_size=PAGE_SIZE,
+        prefix_sharing=sharing,
+    )
+    eng.warmup()
+    # primer: one completed request leaves the system prompt's 4 pages
+    # registered and resident (refcount 0, evictable) for the burst
+    eng.submit(SYS_PROMPT + [200], max_tokens=2)
+    eng.run_until_done(max_steps=10_000)
+    eng.finished.clear()
+    eng.reset_stats()
+
+    t0 = time.perf_counter()
+    for i in range(N_CHAT):
+        tail = [] if i == 0 else [210 + i, 220 + i, 230 + i]
+        eng.submit(SYS_PROMPT + tail, max_tokens=MAX_TOKENS)
+    done = eng.run_until_done(max_steps=10_000)
+    wall_s = max(time.perf_counter() - t0, 1e-9)
+    assert len(done) == N_CHAT and all(r.status == "ok" for r in done)
+
+    st = eng.stats()
+    return {
+        "requests": N_CHAT,
+        "n_slots": N_SLOTS,
+        "prefill_chunk": PREFILL_CHUNK,
+        "tp": 1,
+        "steps": st["steps"],
+        "prefill_tokens": st["prefill_tokens"],
+        "prefill_forwards": st["prefill_forwards"],
+        "prefill_tok_s": round(st["prefill_tok_s"], 1),
+        "decode_tokens": st["decode_tokens"],
+        "decode_forwards": st["decode_forwards"],
+        "decode_tok_s": round(st["decode_tok_s"], 1),
+        "decode_occupancy": round(st["decode_occupancy"], 3),
+        "shape_cache_hits": st["shape_cache_hits"],
+        "wall_s": round(wall_s, 3),
+        # pool gauges (deterministic scheduler counters — regression-gated)
+        "page_size": PAGE_SIZE,
+        "kv_pages_total": st["kv_pages_total"],
+        "kv_pages_peak": st["kv_pages_peak"],
+        "kv_bytes_resident": st["kv_bytes_resident"],
+        "kv_bytes_peak": st["kv_bytes_peak"],
+        "kv_bytes_dense_equiv": st["kv_bytes_dense_equiv"],
+        "pool_utilization": round(st["pool_utilization"], 3),
+        "prefix_hits": st["prefix_hits"],
+        "prefix_lookups": st["prefix_lookups"],
+        "prefix_hit_rate": round(
+            st["prefix_hits"] / st["prefix_lookups"], 3
+        ) if st["prefix_lookups"] else 0.0,
+        "prefill_tokens_skipped": st["prefill_tokens_skipped"],
+        "cow_copies": st["cow_copies"],
     }
 
 
@@ -142,6 +213,16 @@ def main(json_path: str | pathlib.Path | None = None) -> list[dict]:
         art = load_artifact(pathlib.Path(td) / "art")
         emit({"load": "artifact_12req", **_run_load(art.bundle, art.params, 12)})
 
+    # paged-KV chat pattern: prefix sharing must pay for itself, in both
+    # compute (prefill forwards skipped) and memory (resident below dense)
+    shared = _prefix_chat_row(bundle, params, sharing=True)
+    cold = _prefix_chat_row(bundle, params, sharing=False)
+    emit({"load": "prefix_chat_shared_8req", **shared})
+    emit({"load": "prefix_chat_nosharing_8req", **cold})
+    assert shared["prefill_forwards"] < cold["prefill_forwards"], (shared, cold)
+    assert shared["prefill_tokens_skipped"] > 0, shared
+    assert shared["kv_bytes_peak"] < shared["kv_bytes_dense_equiv"], shared
+
     try:
         emit(_tp2_row())
     except Exception as e:  # noqa: BLE001 — the tp row is best-effort
@@ -149,7 +230,7 @@ def main(json_path: str | pathlib.Path | None = None) -> list[dict]:
 
     if json_path is not None:
         payload = {
-            "schema": "serving_bench.v2",
+            "schema": "serving_bench.v3",
             "arch": "qwen3_1p7b(reduced,L=2)",
             "mode": "lut_infer",
             "backend": jax.default_backend(),

@@ -612,20 +612,31 @@ class ModelBundle:
         return self.loss_from_logits(logits, aux, batch["labels"])
 
     # ---------------- serving ----------------
-    def init_caches(self, b: int, s_max: int, *, abstract=False, dtype=jnp.bfloat16):
+    def init_caches(self, b: int, s_max: int, *, abstract=False, dtype=jnp.bfloat16,
+                    paged=None):
+        """paged: an attention.PagedSpec — attention KV leaves become pooled
+        {"k_pool","v_pool"} of (n_pages, page_size, KV, Dh) shared across the
+        batch (DESIGN.md §12); mamba/cross leaves stay per-slot."""
         if self.kind == "lm":
-            return tf_mod.init_caches(self.cfg, b, s_max, dtype, abstract=abstract)
+            return tf_mod.init_caches(self.cfg, b, s_max, dtype, abstract=abstract,
+                                      paged=paged)
         if self.kind == "hybrid":
-            return hybrid_mod.hybrid_caches(self.cfg, b, s_max, dtype, abstract=abstract)
-        return encdec_mod.encdec_caches(self.cfg, b, s_max, dtype, abstract=abstract)
+            return hybrid_mod.hybrid_caches(self.cfg, b, s_max, dtype, abstract=abstract,
+                                            paged=paged)
+        return encdec_mod.encdec_caches(self.cfg, b, s_max, dtype, abstract=abstract,
+                                        paged=paged)
 
     def forward_step(self, params, batch, caches, *, compute_dtype=jnp.bfloat16):
         """One serving step (prefill if S>1, decode if S==1).
 
         batch: tokens/embeds (+ optional frames for encdec prefill),
-        cache_len (B,). Returns (logits for the new positions, new caches).
+        cache_len (B,); paged caches additionally take block_tables (B, P)
+        and write_len (B,). Returns (logits for the new positions, new
+        caches).
         """
         cache_len = batch["cache_len"]
+        block_tables = batch.get("block_tables")
+        write_len = batch.get("write_len")
         if self.kind == "encdec":
             caches = dict(caches)
             if "frames" in batch:                      # prefill: run encoder
@@ -640,6 +651,7 @@ class ModelBundle:
             logits, new_caches = encdec_mod.decode(
                 self.cfg, params, tokens=batch["tokens"], pos=pos,
                 caches=caches, cache_len=cache_len, compute_dtype=compute_dtype,
+                block_tables=block_tables, write_len=write_len,
             )
             return logits, new_caches
 
@@ -649,6 +661,7 @@ class ModelBundle:
             logits, new_caches, _ = hybrid_mod.hybrid_apply(
                 self.cfg, params, tokens=batch["tokens"], pos=pos,
                 caches=caches, cache_len=cache_len, compute_dtype=compute_dtype,
+                block_tables=block_tables, write_len=write_len,
             )
             return logits, new_caches
 
@@ -662,6 +675,7 @@ class ModelBundle:
         logits, new_caches, _ = tf_mod.lm_apply(
             self.cfg, params, tokens=tok, embeds=emb, pos=pos,
             caches=caches, cache_len=cache_len, compute_dtype=compute_dtype,
+            block_tables=block_tables, write_len=write_len,
         )
         return logits, new_caches
 

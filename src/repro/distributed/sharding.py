@@ -189,6 +189,14 @@ class ShardingRules:
         """KV/SSM caches. Layer-stacked leading dim, then batch."""
         name = path.split("/")[-1]
         bspec = self.batch_dim(batch)
+        if name in ("k_pool", "v_pool") and len(shape) == 5:
+            # paged pool (L, n_pages, page_size, KV, Dh): pages replace the
+            # slot axis as the data-parallel dim; KV heads over "model" when
+            # divisible (SP over the page axis would split single pages)
+            pages = (self._dp_spec_entry()
+                     if shape[1] % self.dp_size == 0 else None)
+            kvh = "model" if shape[3] % self.tp == 0 else None
+            return P(None, pages, None, kvh, None)
         if name in ("k", "v") and len(shape) == 5:       # (L, B, S, KV, Dh)
             seq = "model" if shape[2] % self.tp == 0 else None
             return P(None, bspec, seq, None, None)

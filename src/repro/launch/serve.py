@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, build_model, get_arch, reduce_arch
 from repro.core.amm import Mode
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import KV_DTYPES, ServingEngine
 from repro.serving.sampling import SamplingParams
 
 
@@ -63,6 +63,20 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--dtype", choices=("float32", "bfloat16"), default="float32",
                     help="engine compute dtype; also keys the LUT autotune "
                          "warmup so tuned blocks match runtime")
+    # paged KV cache (DESIGN.md §12)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: pooled pages + block tables with "
+                         "prefix sharing and copy-on-write; tokens are "
+                         "byte-identical to the dense engine")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (must divide --max-seq)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="pool size in pages; default slots*max_seq/page_size"
+                         "+1 (dense-equivalent) — pass less to overcommit "
+                         "memory (exhaustion sheds, never OOMs)")
+    ap.add_argument("--kv-dtype", choices=sorted(KV_DTYPES), default=None,
+                    help="KV-cache storage dtype (default: compute dtype); "
+                         "fp8 halves cache HBM, K/V are upcast at use")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature; 0 = greedy")
     ap.add_argument("--top-k", type=int, default=0, help="top-k filter; 0 disables")
@@ -143,7 +157,7 @@ def main(argv: list[str] | None = None) -> None:
     eng = ServingEngine(
         bundle, params, n_slots=args.slots, max_seq=args.max_seq,
         prefill_chunk=args.prefill_chunk, compute_dtype=compute_dtype,
-        mesh=mesh,
+        mesh=mesh, **_paged_kwargs(args),
     )
 
     if not args.no_warmup:
@@ -178,8 +192,32 @@ def main(argv: list[str] | None = None) -> None:
           f"({st['decode_tok_s']:.1f} tok/s)  "
           f"occupancy={st['decode_occupancy']:.2f}  "
           f"shape_cache_hits={st['shape_cache_hits']}")
+    if args.paged:
+        hits = (st["prefix_hits"] / st["prefix_lookups"]
+                if st["prefix_lookups"] else 0.0)
+        print(f"  pool: {st['kv_pages_resident']}/{st['kv_pages_total']} pages "
+              f"resident (peak {st['kv_pages_peak']}, "
+              f"util {st['pool_utilization']:.2f}, "
+              f"{st['kv_bytes_resident']} B vs dense "
+              f"{st['kv_bytes_dense_equiv']} B)  "
+              f"prefix: {st['prefix_hits']} hits / {st['prefix_lookups']} "
+              f"lookups ({hits:.2f}/req), {st['prefill_tokens_skipped']} "
+              f"prefill tok skipped  cow={st['cow_copies']}  "
+              f"shed={st['shed']}")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
+
+
+def _paged_kwargs(args) -> dict:
+    """Engine kwargs for the paged pool + KV dtype. JSON-safe on purpose:
+    the supervisor ships engine_kwargs to the worker process as JSON, and
+    KV_DTYPES resolves the dtype string on the far side."""
+    kw: dict = {}
+    if args.paged:
+        kw.update(paged=True, page_size=args.page_size, n_pages=args.n_pages)
+    if args.kv_dtype is not None:
+        kw["kv_dtype"] = args.kv_dtype
+    return kw
 
 
 def _reduced_arch(args):
@@ -203,6 +241,7 @@ def _serve_http(args) -> None:
     engine_kwargs = dict(
         n_slots=args.slots, max_seq=args.max_seq,
         prefill_chunk=args.prefill_chunk, max_queue=args.max_queue,
+        **_paged_kwargs(args),
     )
     if args.supervise:
         from repro.serving.supervisor import EngineSupervisor

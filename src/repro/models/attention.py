@@ -191,6 +191,75 @@ def cache_specs(b: int, s_max: int, cfg: AttnCfg, dtype=jnp.bfloat16) -> Params:
     }
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# A paged cache is a pool of `n_pages` physical pages of `page_size` token
+# positions each, shared by every sequence in the batch; each sequence maps
+# its logical positions through a per-row block table (B, P) of page ids.
+# Page 0 is the reserved *garbage* page: masked / out-of-range writes are
+# routed there instead of being merged away with a select, so the jitted
+# step function needs no per-slot write mask over pool leaves. Allocators
+# must never hand out page 0. Pool content stays finite (zeros at init,
+# activation values after), so gathered-then-masked garbage contributes
+# exactly 0 to the flash softmax.
+
+GARBAGE_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Layout of a paged KV pool."""
+    n_pages: int
+    page_size: int
+
+
+def paged_init_cache(spec: PagedSpec, cfg: AttnCfg, dtype=jnp.bfloat16) -> Params:
+    shape = (spec.n_pages, spec.page_size, cfg.n_kv_heads, cfg.d_head)
+    return {"k_pool": jnp.zeros(shape, dtype), "v_pool": jnp.zeros(shape, dtype)}
+
+
+def paged_cache_specs(spec: PagedSpec, cfg: AttnCfg, dtype=jnp.bfloat16) -> Params:
+    shape = (spec.n_pages, spec.page_size, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k_pool": jax.ShapeDtypeStruct(shape, dtype),
+        "v_pool": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+def paged_write_flat(
+    block_tables: jax.Array,   # (B, P) int32 page ids
+    cache_len: jax.Array,      # (B,) logical write cursor
+    s: int,                    # fresh positions per row
+    page_size: int,
+    write_len: jax.Array,      # (B,) valid count; offsets >= write_len -> garbage
+) -> jax.Array:
+    """(B, s) indices into the page-flattened pool axis (n_pages*page_size)
+    for the `s` fresh positions starting at cache_len. Invalid positions
+    (padding rows, chunk tail past write_len, or past the table width) all
+    land in GARBAGE_PAGE."""
+    n_tables = block_tables.shape[1]
+    off = jnp.arange(s, dtype=jnp.int32)[None, :]
+    write_idx = cache_len[:, None].astype(jnp.int32) + off     # (B, s) logical
+    p_idx = write_idx // page_size
+    ok = (off < write_len[:, None]) & (p_idx < n_tables)
+    pages = jnp.take_along_axis(block_tables, jnp.minimum(p_idx, n_tables - 1), axis=1)
+    pages = jnp.where(ok, pages, GARBAGE_PAGE)
+    return pages * page_size + jnp.where(ok, write_idx % page_size, 0)
+
+
+def paged_gather(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Materialize each row's logical KV extent: (B, P*page_size, KV, Dh).
+
+    The gathered layout is *identical* to the dense (B, s_max, KV, Dh) cache
+    when P*page_size == s_max, which is what makes paged serving token
+    parity with the dense engine exact rather than approximate."""
+    b, p = block_tables.shape
+    g = pool[block_tables]                     # (B, P, page_size, KV, Dh)
+    return g.reshape(b, p * pool.shape[1], *pool.shape[2:])
+
+
 def attention(
     cfg: AttnCfg,
     p: Params,
@@ -202,6 +271,8 @@ def attention(
     x_kv: jax.Array | None = None,       # cross-attention memory (B, T, D)
     kv_pos: jax.Array | None = None,
     defer_cache_write: bool = False,
+    block_tables: jax.Array | None = None,  # (B, P) page ids (paged cache)
+    write_len: jax.Array | None = None,     # (B,) valid fresh tokens per row
 ) -> tuple[jax.Array, Params | None]:
     """Returns (output (B, S, D), updated cache).
 
@@ -210,6 +281,12 @@ def attention(
     {"k_slab", "v_slab"} instead of a rewritten cache — the caller scatters
     all layers' slabs into the stacked cache in one O(tokens) write, so the
     per-layer functional cache copy disappears from the scan.
+
+    Paged caches ({"k_pool", "v_pool"}, DESIGN.md §12) route through the
+    same entry point: writes scatter into the page-flattened pool via the
+    block table (invalid positions land in the garbage page), reads gather
+    the row's pages back into the dense logical layout and reuse the exact
+    dense masks, so outputs are bit-identical to the dense cache path.
     """
     b, s, _ = x.shape
     src = x if x_kv is None else x_kv
@@ -226,6 +303,13 @@ def attention(
     if x_kv is None:
         k = _rope(cfg, k, pos if kv_pos is None else kv_pos)
 
+    paged = cache is not None and "k_pool" in cache
+    if paged:
+        if block_tables is None:
+            raise ValueError("paged cache requires block_tables")
+        if write_len is None:
+            write_len = jnp.full((b,), s, jnp.int32)
+
     if cache is None:
         out = flash_attention(
             q, k, v,
@@ -234,6 +318,56 @@ def attention(
             causal=cfg.causal,
         )
         new_cache = None
+    elif paged and defer_cache_write:
+        # flash-decoding over (stale gathered pages) + (fresh slab); the
+        # segment-level scatter writes the slab into the pool afterwards
+        page_size = cache["k_pool"].shape[1]
+        s_logical = block_tables.shape[1] * page_size
+        kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(b, s, kvh, g, cfg.d_head)
+        all_pos = jnp.arange(s_logical, dtype=jnp.int32)[None, :].repeat(b, 0)
+        stale_valid = all_pos < cache_len[:, None]
+        part_cache = _attend_stats(
+            qg,
+            paged_gather(cache["k_pool"], block_tables),
+            paged_gather(cache["v_pool"], block_tables),
+            q_pos=flat_pos, kv_pos=all_pos, causal=cfg.causal, kv_valid=stale_valid,
+        )
+        slab_pos = (cache_len[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :])
+        part_slab = _attend_stats(
+            qg, k, v, q_pos=flat_pos, kv_pos=slab_pos, causal=cfg.causal, kv_valid=None,
+        )
+        out = _merge_stats([part_cache, part_slab]).reshape(b, s, cfg.n_heads, cfg.d_head)
+        out = out.astype(q.dtype)
+        new_cache = {
+            "k_slab": k.astype(cache["k_pool"].dtype),
+            "v_slab": v.astype(cache["v_pool"].dtype),
+        }
+    elif paged:
+        # scatter fresh K/V into the page-flattened pool (garbage-routed
+        # masking), then gather this row's pages and attend densely
+        n_pages, page_size = cache["k_pool"].shape[:2]
+        flat = paged_write_flat(block_tables, cache_len, s, page_size, write_len)
+        flat_shape = (n_pages * page_size, cfg.n_kv_heads, cfg.d_head)
+        ck = (cache["k_pool"].reshape(flat_shape)
+              .at[flat].set(k.astype(cache["k_pool"].dtype))
+              .reshape(cache["k_pool"].shape))
+        cv = (cache["v_pool"].reshape(flat_shape)
+              .at[flat].set(v.astype(cache["v_pool"].dtype))
+              .reshape(cache["v_pool"].shape))
+        new_cache = {"k_pool": ck, "v_pool": cv}
+        s_logical = block_tables.shape[1] * page_size
+        all_pos = jnp.arange(s_logical, dtype=jnp.int32)[None, :].repeat(b, 0)
+        valid = all_pos < (cache_len + s)[:, None]
+        out = flash_attention(
+            q,
+            paged_gather(ck, block_tables),
+            paged_gather(cv, block_tables),
+            q_pos=flat_pos,
+            kv_pos=all_pos,
+            causal=cfg.causal,
+            kv_valid=valid,
+        )
     elif defer_cache_write:
         # flash-decoding over (stale cache) + (fresh slab), no cache rewrite
         s_max = cache["k"].shape[1]

@@ -70,13 +70,18 @@ def encdec_init(key: jax.Array, cfg: EncDecCfg, *, dtype=jnp.float32) -> Params:
     }
 
 
-def encdec_caches(cfg: EncDecCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstract: bool = False):
-    """Self-attn KV cache + precomputed cross K/V, both stacked over layers."""
+def encdec_caches(cfg: EncDecCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstract: bool = False,
+                  paged: attn_mod.PagedSpec | None = None):
+    """Self-attn KV cache + precomputed cross K/V, both stacked over layers.
+
+    Only the self-attention cache pages (cross K/V is a fixed enc_frames
+    extent computed once per request — paging it buys nothing)."""
     L = cfg.n_dec_layers
     if abstract:
         self_c = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((L, *s.shape), s.dtype),
-            attn_mod.cache_specs(b, s_max, cfg.dec_self, dtype),
+            attn_mod.paged_cache_specs(paged, cfg.dec_self, dtype) if paged is not None
+            else attn_mod.cache_specs(b, s_max, cfg.dec_self, dtype),
         )
         cross_c = {
             "k": jax.ShapeDtypeStruct((L, b, cfg.enc_frames, cfg.dec_cross.n_kv_heads, cfg.dec_cross.d_head), dtype),
@@ -85,7 +90,8 @@ def encdec_caches(cfg: EncDecCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstra
     else:
         self_c = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (L, *a.shape)).copy(),
-            attn_mod.init_cache(b, s_max, cfg.dec_self, dtype),
+            attn_mod.paged_init_cache(paged, cfg.dec_self, dtype) if paged is not None
+            else attn_mod.init_cache(b, s_max, cfg.dec_self, dtype),
         )
         cross_c = {
             "k": jnp.zeros((L, b, cfg.enc_frames, cfg.dec_cross.n_kv_heads, cfg.dec_cross.d_head), dtype),
@@ -156,10 +162,12 @@ def _cross_attend(a: AttnCfg, pl_: Params, x: jax.Array, kv: Params) -> jax.Arra
 def _dec_block(
     cfg: EncDecCfg, pl_: Params, x: jax.Array, *,
     pos, self_cache, cache_len, cross: Params,
+    block_tables=None, write_len=None,
 ) -> tuple[jax.Array, Params | None]:
     a, new_cache = attn_mod.attention(
         cfg.dec_self, pl_["self"], rmsnorm(pl_["norm1"], x),
         pos=pos, cache=self_cache, cache_len=cache_len,
+        block_tables=block_tables, write_len=write_len,
     )
     x = x + a
     x = x + _cross_attend(cfg.dec_cross, pl_["cross"], rmsnorm(pl_["norm2"], x), cross)
@@ -177,6 +185,8 @@ def decode(
     caches: Params | None = None,          # serve path (includes cross KV)
     cache_len: jax.Array | None = None,
     compute_dtype=jnp.float32,
+    block_tables: jax.Array | None = None,
+    write_len: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None]:
     x = embed(params["embed"], tokens).astype(compute_dtype)
 
@@ -204,7 +214,8 @@ def decode(
     else:
         def body(xc, layer_in):
             pl_, sc, cr = layer_in
-            y, nc = _dec_block(cfg, pl_, xc, pos=pos, self_cache=sc, cache_len=cache_len, cross=cr)
+            y, nc = _dec_block(cfg, pl_, xc, pos=pos, self_cache=sc, cache_len=cache_len,
+                               cross=cr, block_tables=block_tables, write_len=write_len)
             return y, nc
 
         x, new_self = jax.lax.scan(

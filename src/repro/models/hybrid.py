@@ -78,14 +78,16 @@ def hybrid_init(key: jax.Array, cfg: HybridCfg, *, dtype=jnp.float32) -> Params:
     }
 
 
-def hybrid_caches(cfg: HybridCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstract: bool = False):
+def hybrid_caches(cfg: HybridCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstract: bool = False,
+                  paged: attn_mod.PagedSpec | None = None):
     n_inv = len(cfg.invocation_points)
     if abstract:
         one_m = mamba_mod.mamba2_cache_specs(b, cfg.mamba_block.mamba, dtype)
         mstack = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((cfg.n_layers, *s.shape), s.dtype), one_m
         )
-        one_a = attn_mod.cache_specs(b, s_max, cfg.shared_attn, dtype)
+        one_a = (attn_mod.paged_cache_specs(paged, cfg.shared_attn, dtype) if paged is not None
+                 else attn_mod.cache_specs(b, s_max, cfg.shared_attn, dtype))
         astack = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((n_inv, *s.shape), s.dtype), one_a
         )
@@ -94,7 +96,8 @@ def hybrid_caches(cfg: HybridCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstra
         mstack = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)).copy(), one_m
         )
-        one_a = attn_mod.init_cache(b, s_max, cfg.shared_attn, dtype)
+        one_a = (attn_mod.paged_init_cache(paged, cfg.shared_attn, dtype) if paged is not None
+                 else attn_mod.init_cache(b, s_max, cfg.shared_attn, dtype))
         astack = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (n_inv, *a.shape)).copy(), one_a
         )
@@ -103,12 +106,13 @@ def hybrid_caches(cfg: HybridCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstra
 
 def _shared_block(
     cfg: HybridCfg, p: Params, x: jax.Array, x0: jax.Array, *,
-    pos, cache, cache_len,
+    pos, cache, cache_len, block_tables=None, write_len=None,
 ) -> tuple[jax.Array, Params | None]:
     h = linear(cfg.fuse, p["fuse"], jnp.concatenate([x, x0], axis=-1))
     a, new_cache = attn_mod.attention(
         cfg.shared_attn, p["attn"], rmsnorm(p["norm1"], h),
         pos=pos, cache=cache, cache_len=cache_len,
+        block_tables=block_tables, write_len=write_len,
     )
     h = h + a
     h = h + mlp_mod.mlp(cfg.shared_mlp, p["mlp"], rmsnorm(p["norm2"], h))
@@ -124,6 +128,8 @@ def hybrid_apply(
     caches: Params | None = None,
     cache_len: jax.Array | None = None,
     compute_dtype=jnp.float32,
+    block_tables: jax.Array | None = None,
+    write_len: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     x = embed(params["embed"], tokens).astype(compute_dtype)
     x0 = x
@@ -179,6 +185,7 @@ def hybrid_apply(
             x, nac = _shared_block(
                 cfg, params["shared"], x, x0,
                 pos=pos, cache=a_cache, cache_len=cache_len,
+                block_tables=block_tables, write_len=write_len,
             )
             if caches is not None:
                 new_a.append(nac)

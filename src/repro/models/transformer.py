@@ -72,15 +72,21 @@ def block_init(key: jax.Array, cfg: BlockCfg, *, dtype=jnp.float32) -> Params:
     return p
 
 
-def block_cache_specs(cfg: BlockCfg, b: int, s_max: int, dtype=jnp.bfloat16) -> Params:
+def block_cache_specs(cfg: BlockCfg, b: int, s_max: int, dtype=jnp.bfloat16,
+                      paged: attn_mod.PagedSpec | None = None) -> Params:
     if cfg.kind == "mamba":
         return mamba_mod.mamba2_cache_specs(b, cfg.mamba, dtype)
+    if paged is not None:
+        return attn_mod.paged_cache_specs(paged, cfg.attn, dtype)
     return attn_mod.cache_specs(b, s_max, cfg.attn, dtype)
 
 
-def block_init_cache(cfg: BlockCfg, b: int, s_max: int, dtype=jnp.bfloat16) -> Params:
+def block_init_cache(cfg: BlockCfg, b: int, s_max: int, dtype=jnp.bfloat16,
+                     paged: attn_mod.PagedSpec | None = None) -> Params:
     if cfg.kind == "mamba":
         return mamba_mod.mamba2_init_cache(b, cfg.mamba, dtype)
+    if paged is not None:
+        return attn_mod.paged_init_cache(paged, cfg.attn, dtype)
     return attn_mod.init_cache(b, s_max, cfg.attn, dtype)
 
 
@@ -93,6 +99,8 @@ def block_apply(
     cache: Params | None = None,
     cache_len: jax.Array | None = None,
     defer_cache_write: bool = False,
+    block_tables: jax.Array | None = None,
+    write_len: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -103,6 +111,7 @@ def block_apply(
     a, new_cache = attn_mod.attention(
         cfg.attn, p["attn"], rmsnorm(p["norm1"], x), pos=pos, cache=cache,
         cache_len=cache_len, defer_cache_write=defer_cache_write,
+        block_tables=block_tables, write_len=write_len,
     )
     x = x + a
     h = rmsnorm(p["norm2"], x)
@@ -150,11 +159,12 @@ def lm_init(key: jax.Array, cfg: LMCfg, *, dtype=jnp.float32) -> Params:
     return p
 
 
-def init_caches(cfg: LMCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstract: bool = False) -> list:
+def init_caches(cfg: LMCfg, b: int, s_max: int, dtype=jnp.bfloat16, abstract: bool = False,
+                paged: attn_mod.PagedSpec | None = None) -> list:
     mk = block_cache_specs if abstract else block_init_cache
     out = []
     for count, bcfg in cfg.segments:
-        one = mk(bcfg, b, s_max, dtype)
+        one = mk(bcfg, b, s_max, dtype, paged=paged)
         if abstract:
             stacked = jax.tree.map(
                 lambda sds: jax.ShapeDtypeStruct((count, *sds.shape), sds.dtype), one
@@ -176,6 +186,8 @@ def _seg_apply(
     remat: bool,
     unroll: bool = False,
     prefix: str = "",
+    block_tables: jax.Array | None = None,
+    write_len: jax.Array | None = None,
 ) -> tuple[jax.Array, Params | None, jax.Array]:
     """scan one segment of stacked layers."""
     if unroll:
@@ -207,7 +219,8 @@ def _seg_apply(
             return (y, aux + a), None
         pl_, cl_ = layer_in
         y, new_c, a = block_apply(bcfg, pl_, xc, pos=pos, cache=cl_,
-                                  cache_len=cache_len, defer_cache_write=defer)
+                                  cache_len=cache_len, defer_cache_write=defer,
+                                  block_tables=block_tables, write_len=write_len)
         return (y, aux + a), new_c
 
     # decode fast path: attention layers return K/V slabs; one scatter into
@@ -223,13 +236,32 @@ def _seg_apply(
     if defer and new_caches is not None:
         b = x.shape[0]
         s_new = new_caches["k_slab"].shape[2]
-        write_idx = cache_len[:, None] + jnp.arange(s_new, dtype=jnp.int32)[None, :]  # (B, s)
-        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]                                # (B, 1)
-        # one O(L*B*s_new) scatter replaces L full-cache functional rewrites
-        new_caches = {
-            "k": caches["k"].at[:, bidx, write_idx].set(new_caches["k_slab"]),
-            "v": caches["v"].at[:, bidx, write_idx].set(new_caches["v_slab"]),
-        }
+        if "k_pool" in caches:
+            # paged: one O(L*B*s_new) scatter into the page-flattened pool;
+            # masked rows route to the garbage page (no select-merge needed)
+            n_pages, page_size = caches["k_pool"].shape[1:3]
+            wl = write_len
+            if wl is None:
+                wl = jnp.full((b,), s_new, jnp.int32)
+            flat = attn_mod.paged_write_flat(
+                block_tables, cache_len, s_new, page_size, wl)          # (B, s)
+
+            def scatter(pool, slab):
+                fp = pool.reshape(pool.shape[0], n_pages * page_size, *pool.shape[3:])
+                return fp.at[:, flat].set(slab).reshape(pool.shape)
+
+            new_caches = {
+                "k_pool": scatter(caches["k_pool"], new_caches["k_slab"]),
+                "v_pool": scatter(caches["v_pool"], new_caches["v_slab"]),
+            }
+        else:
+            write_idx = cache_len[:, None] + jnp.arange(s_new, dtype=jnp.int32)[None, :]  # (B, s)
+            bidx = jnp.arange(b, dtype=jnp.int32)[:, None]                                # (B, 1)
+            # one O(L*B*s_new) scatter replaces L full-cache functional rewrites
+            new_caches = {
+                "k": caches["k"].at[:, bidx, write_idx].set(new_caches["k_slab"]),
+                "v": caches["v"].at[:, bidx, write_idx].set(new_caches["v_slab"]),
+            }
     return x, new_caches, aux
 
 
@@ -243,6 +275,8 @@ def lm_apply(
     caches: list | None = None,
     cache_len: jax.Array | None = None,
     compute_dtype=jnp.float32,
+    block_tables: jax.Array | None = None,
+    write_len: jax.Array | None = None,
 ) -> tuple[jax.Array, list | None, jax.Array]:
     """Returns (logits (B, S, vocab), new caches, aux loss)."""
     if cfg.takes_embeds:
@@ -258,6 +292,7 @@ def lm_apply(
             bcfg, params["segments"][i], x,
             pos=pos, caches=c_i, cache_len=cache_len, remat=cfg.remat,
             unroll=cfg.unroll, prefix=f"segments/{i}",
+            block_tables=block_tables, write_len=write_len,
         )
         if caches is not None:
             new_caches.append(nc)

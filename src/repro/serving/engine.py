@@ -41,6 +41,13 @@ the engine is pure host-side orchestration, so it works identically on
 position-indexed caches (attention masks padding causally); SSM state is
 sequential, so mamba-family bundles need chunk-aligned prompts.
 
+* **Paged KV cache** (DESIGN.md §12) — with `paged=True` the attention
+  cache leaves become a pooled `(n_pages, page_size)` page set shared by
+  all slots; the scheduler owns per-slot block tables, a free-list
+  allocator with refcounted prefix sharing (`serving/kv_pool.py`), and
+  copy-on-write. Prompt prefixes already resident skip their prefill
+  chunks entirely; pool exhaustion preempts by shedding (status "shed"),
+  never by raising. Token output is byte-identical to the dense engine.
 * **Mesh-sharded construction** (DESIGN.md §6.4) — pass `mesh=` (and
   optionally `rules=`) and the engine becomes tensor-parallel: params are
   device_put under `distributed.sharding`'s specs (`table_q` column-sharded
@@ -65,7 +72,25 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ModelBundle
+from repro.models.attention import PagedSpec
+from repro.serving.kv_pool import KVPagePool
 from repro.serving.sampling import GREEDY, SamplingParams, batch_arrays, sample_tokens
+
+# KV-cache storage dtypes accepted by name (process-boundary friendly:
+# the supervisor ships engine kwargs as JSON). Sub-bf16 entries store K/V
+# in 8 bits; _attend_stats upcasts at use (models/attention.py).
+KV_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "float8_e4m3fn": jnp.float8_e4m3fn,
+    "float8_e5m2": jnp.float8_e5m2,
+}
+
+
+def _is_pool_leaf(path) -> bool:
+    """True for paged-pool cache leaves (k_pool/v_pool) in a tree path."""
+    return any(getattr(k, "key", None) in ("k_pool", "v_pool") for k in path)
 
 
 def iter_lut_kernel_sites(cfg: Any, _seen: set[int] | None = None) -> Iterator[Any]:
@@ -197,6 +222,11 @@ class ServingEngine:
         rules: Any | None = None,
         max_queue: int | None = None,
         faults: Any | None = None,
+        paged: bool = False,
+        page_size: int = 16,
+        n_pages: int | None = None,
+        prefix_sharing: bool = True,
+        kv_dtype: Any | None = None,
     ):
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue={max_queue} must be >= 1 (or None)")
@@ -229,7 +259,60 @@ class ServingEngine:
             )
         else:
             self.n_lut_shapes_tuned = 0
-        self.caches = bundle.init_caches(n_slots, max_seq, dtype=compute_dtype)
+
+        # KV storage dtype: defaults to the compute dtype; sub-bf16 (fp8)
+        # halves cache HBM — _attend_stats upcasts at the dot
+        if kv_dtype is None:
+            kv_dtype = compute_dtype
+        elif isinstance(kv_dtype, str):
+            if kv_dtype not in KV_DTYPES:
+                raise ValueError(
+                    f"kv_dtype={kv_dtype!r}: pick one of {sorted(KV_DTYPES)}")
+            kv_dtype = KV_DTYPES[kv_dtype]
+        self.kv_dtype = kv_dtype
+
+        # paged KV pool (DESIGN.md §12): attention cache leaves become a
+        # shared (n_pages, page_size) pool; the scheduler owns block tables
+        self.paged = bool(paged)
+        paged_spec = None
+        if self.paged:
+            if max_seq % page_size:
+                raise ValueError(
+                    f"page_size={page_size} must divide max_seq={max_seq} "
+                    f"(the block table covers exactly max_seq positions)")
+            self.n_tables = max_seq // page_size
+            if n_pages is None:
+                # dense-equivalent capacity by default (+ the garbage page):
+                # memory wins come from passing a smaller n_pages
+                n_pages = n_slots * self.n_tables + 1
+            paged_spec = PagedSpec(n_pages=n_pages, page_size=page_size)
+            # prefix sharing is only sound when the ENTIRE cache state lives
+            # in the pool: skipping a prefill chunk also skips computing any
+            # per-slot recurrent state (mamba conv/ssm, encdec cross-KV) for
+            # those tokens, which pages cannot carry. Auto-disable it for
+            # such bundles — paging itself (tables, COW, shed) still works.
+            if prefix_sharing:
+                spec_leaves = jax.tree_util.tree_flatten_with_path(
+                    bundle.init_caches(n_slots, max_seq, abstract=True,
+                                       dtype=self.kv_dtype, paged=paged_spec)
+                )[0]
+                prefix_sharing = all(_is_pool_leaf(p) for p, _ in spec_leaves)
+            self.pool = KVPagePool(n_pages, page_size, prefix_sharing=prefix_sharing)
+            self.block_tables = np.zeros((n_slots, self.n_tables), np.int32)
+            self.slot_pages: list[list[int]] = [[] for _ in range(n_slots)]
+            self._pending_copies: list[tuple[int, int]] = []
+        self.caches = bundle.init_caches(
+            n_slots, max_seq, dtype=self.kv_dtype, paged=paged_spec
+        )
+        # bytes per pool page across all layers (0 when no attention leaves,
+        # e.g. a pure-SSM bundle) — drives the kv_bytes_* gauges
+        if self.paged:
+            pool_bytes = sum(
+                int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+                for path, leaf in jax.tree_util.tree_flatten_with_path(self.caches)[0]
+                if _is_pool_leaf(path)
+            )
+            self._page_bytes = pool_bytes // n_pages
         if rules is not None:
             # place model state once at construction (DESIGN.md §6.4):
             # tables column-sharded / codebooks replicated per param_spec,
@@ -252,22 +335,28 @@ class ServingEngine:
         self._compute_dtype = compute_dtype
         self.reset_stats()
 
-        def step_fn(params, tokens, cache_len, caches, slot_mask):
+        def step_fn(params, tokens, cache_len, caches, slot_mask,
+                    block_tables=None, write_len=None):
+            batch = {"tokens": tokens, "cache_len": cache_len}
+            if block_tables is not None:
+                batch["block_tables"] = block_tables
+                batch["write_len"] = write_len
             logits, new_caches = bundle.forward_step(
-                params,
-                {"tokens": tokens, "cache_len": cache_len},
-                caches,
-                compute_dtype=compute_dtype,
+                params, batch, caches, compute_dtype=compute_dtype,
             )
-            # merge: only the masked slots' cache rows advance
-            def merge(old, new):
-                # every cache leaf is layer-stacked: (L, B, ...) -> batch dim 1
+            # merge: only the masked slots' cache rows advance. Pool leaves
+            # carry no slot axis — their writes are already masked in-kernel
+            # (invalid rows route to the garbage page), so they pass through.
+            def merge(path, old, new):
+                if _is_pool_leaf(path):
+                    return new
+                # every per-slot cache leaf is layer-stacked: (L, B, ...)
                 shape = [1] * old.ndim
                 shape[1] = n_slots
                 m = slot_mask.reshape(shape)
                 return jnp.where(m, new, old)
 
-            merged = jax.tree.map(merge, caches, new_caches)
+            merged = jax.tree_util.tree_map_with_path(merge, caches, new_caches)
             return logits, merged
 
         # one jitted row-masked forward serves both phases; the two token
@@ -279,10 +368,12 @@ class ServingEngine:
             row = NamedSharding(mesh, P(rules.batch_dim(n_slots)))
             tok = NamedSharding(mesh, P(rules.batch_dim(n_slots), None))
             logits_sh = NamedSharding(mesh, P(rules.batch_dim(n_slots), None, None))
+            in_sh = [self._param_shardings, tok, row, self._cache_shardings, row]
+            if self.paged:
+                in_sh += [tok, row]     # block_tables ride the slot axis too
             self._step_fn = jax.jit(
                 step_fn,
-                in_shardings=(self._param_shardings, tok, row,
-                              self._cache_shardings, row),
+                in_shardings=tuple(in_sh),
                 out_shardings=(logits_sh, self._cache_shardings),
             )
         else:
@@ -305,8 +396,12 @@ class ServingEngine:
             "cancelled": 0,
             "shed": 0,
             "error": 0,
+            # prompt tokens satisfied from the prefix cache (never forwarded)
+            "prefill_tokens_skipped": 0,
         }
         self._shapes_seen: set[tuple[int, int]] = set()
+        if self.paged:
+            self.pool.reset_counters()
 
     def stats(self) -> dict[str, Any]:
         """Scheduler counters since construction / the last reset_stats()."""
@@ -322,6 +417,24 @@ class ServingEngine:
         c["prefill_tok_s"] = c["prefill_tokens"] / c["prefill_s"] if c["prefill_s"] else 0.0
         c["decode_tok_s"] = c["decode_tokens"] / c["decode_s"] if c["decode_s"] else 0.0
         c["lut_shapes_tuned"] = self.n_lut_shapes_tuned
+        if self.paged:
+            # pool gauges (DESIGN.md §12.4) — numeric, so server.py /metrics
+            # exports each as lutnn_serving_<key> with no extra wiring
+            pool = self.pool
+            c["kv_pages_total"] = pool.n_allocatable
+            c["kv_pages_free"] = pool.n_free
+            c["kv_pages_cached"] = pool.n_cached
+            c["kv_pages_shared"] = pool.n_shared
+            c["kv_pages_resident"] = pool.n_resident
+            c["kv_pages_peak"] = pool.peak_resident
+            c.update(pool.counters)       # prefix_hits/lookups, cow_copies, ...
+            c["kv_bytes_resident"] = pool.n_resident * self._page_bytes
+            c["kv_bytes_peak"] = pool.peak_resident * self._page_bytes
+            # what the dense per-slot layout would pin for the same leaves
+            c["kv_bytes_dense_equiv"] = (
+                self._page_bytes * self.n_slots * self.n_tables)
+            c["pool_utilization"] = (
+                pool.n_resident / pool.n_allocatable if pool.n_allocatable else 0.0)
         return c
 
     # ------------------------------------------------------------------
@@ -366,7 +479,9 @@ class ServingEngine:
         prompt = list(prompt) or [0]
         # chunk padding writes cache rows up to the padded length, so the
         # PADDED prompt must fit — an over-long prompt would otherwise have
-        # its scatter writes silently dropped at the max_seq boundary
+        # its scatter writes silently dropped at the max_seq boundary.
+        # (Paged mode routes out-of-range padding writes to the garbage
+        # page, but the block table still only covers max_seq positions.)
         padded = -(-len(prompt) // self.prefill_chunk) * self.prefill_chunk
         if padded > self.max_seq:
             raise ValueError(
@@ -375,9 +490,27 @@ class ServingEngine:
             )
         if max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
-        # decode writes positions len(prompt) .. len(prompt)+max_tokens-2
-        # (the final token is sampled but never fed back): cap to the cache
-        max_tokens = min(max_tokens, self.max_seq - len(prompt) + 1)
+        if self.paged:
+            # admission-time capacity in PAGE-POOL terms: a request that
+            # could never hold enough pages even running alone must be
+            # rejected here, not discovered as an endless shed loop later
+            ps = self.pool.page_size
+            need = -(-len(prompt) // ps)
+            if need > self.pool.n_allocatable:
+                raise ValueError(
+                    f"prompt of {len(prompt)} tokens needs {need} pages; the "
+                    f"pool only has {self.pool.n_allocatable} allocatable "
+                    f"pages of {ps} (n_pages={self.pool.n_pages} incl. the "
+                    f"reserved garbage page)"
+                )
+            # decode writes positions len(prompt) .. len(prompt)+max_tokens-2
+            # (the final token is sampled but never fed back): cap against
+            # the positions a lone request could actually be allocated
+            cap = min(self.max_seq, self.pool.n_allocatable * ps)
+            max_tokens = min(max_tokens, cap - len(prompt) + 1)
+        else:
+            # dense cache: every slot owns a full max_seq row
+            max_tokens = min(max_tokens, self.max_seq - len(prompt) + 1)
         now = time.monotonic()
         rid = self._next_rid
         self._next_rid += 1
@@ -452,13 +585,33 @@ class ServingEngine:
     def _admit(self) -> None:
         """Fill free slots from the queue, highest priority first (FIFO
         within a priority level). Pure bookkeeping — the admitted slots'
-        prompts are consumed by the shared chunk forward in step()."""
+        prompts are consumed by the shared chunk forward in step().
+
+        Paged mode also runs the prefix-cache lookup here: the longest
+        chain of cached full-page prefixes of the prompt maps straight into
+        the slot's block table and those tokens never reach a prefill
+        forward — the chunked-prefill loop starts at the first unshared
+        token. A fully-cached prompt is clamped to len-1 shared tokens (the
+        final prompt token must still run one forward to produce the first
+        output logits); its re-write into the shared final page is what
+        exercises copy-on-write end-to-end."""
         for i in range(self.n_slots):
             if self.slots[i] is None and self.queue:
                 req = max(self.queue, key=lambda r: (r.priority, -r.rid))
                 self.queue.remove(req)
                 self.slots[i] = req
                 self.cache_len[i] = 0
+                if self.paged:
+                    pages = self.pool.lookup_prefix(req.prompt)
+                    shared = len(pages) * self.pool.page_size
+                    if shared >= len(req.prompt):
+                        shared = len(req.prompt) - 1
+                    self.slot_pages[i] = pages
+                    self.block_tables[i, :] = 0
+                    self.block_tables[i, : len(pages)] = pages
+                    req.n_prefilled = shared
+                    self.cache_len[i] = shared
+                    self._counters["prefill_tokens_skipped"] += shared
 
     def _retire(self, slot: int, req: Request, status: str = "ok") -> None:
         req.done = True
@@ -468,6 +621,94 @@ class ServingEngine:
         self.finished.append(req)
         self.slots[slot] = None
         self.cache_len[slot] = 0
+        if self.paged:
+            for page in self.slot_pages[slot]:
+                self.pool.unref(page)     # registered pages stay evictable
+            self.slot_pages[slot] = []
+            self.block_tables[slot, :] = 0
+
+    # ---------------- paged allocation (DESIGN.md §12.3) ----------------
+    def _shed_for_pages(self, needy_slot: int) -> bool:
+        """Preemption-by-shedding: free pages by retiring the lowest-
+        priority active request (the newest among ties, matching queue-shed
+        semantics) with status "shed". Returns False when the victim was
+        the needy request itself — the caller must stop allocating for it."""
+        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        vi, vr = min(live, key=lambda ir: (ir[1].priority, -ir[1].rid))
+        self._retire(vi, vr, "shed")
+        return vi != needy_slot
+
+    def _alloc_page_for(self, slot: int) -> int | None:
+        """One page for `slot`, shedding requests on pool exhaustion until
+        one frees (alloc itself already reclaims evictable prefix pages
+        first). Returns None only when `slot`'s own request was shed —
+        allocation failure is always a clean `shed`, never an exception."""
+        while True:
+            page = self.pool.alloc()
+            if page is not None:
+                return page
+            if not self._shed_for_pages(slot):
+                return None
+
+    def _prepare_slot_writes(self, slot: int, n_new: int) -> bool:
+        """Make slot's block table safely writable for the next `n_new`
+        logical positions: extend it with fresh pages, and copy-on-write
+        any page in the write range that other requests or the prefix
+        cache can still see. Returns False when the slot's request was
+        shed during allocation (the caller drops it from this forward)."""
+        ps = self.pool.page_size
+        start = int(self.cache_len[slot])
+        need = -(-(start + n_new) // ps)              # pages covering the write
+        pages = self.slot_pages[slot]
+        while len(pages) < need:
+            page = self._alloc_page_for(slot)
+            if page is None:
+                return False
+            self.block_tables[slot, len(pages)] = page
+            pages.append(page)
+        for pi in range(start // ps, need):
+            if not self.pool.needs_cow(pages[pi]):
+                continue
+            dst = self._alloc_page_for(slot)
+            if dst is None:
+                return False
+            # device copy happens in one batched transfer before the
+            # forward (_flush_copies); bookkeeping moves over now
+            self._pending_copies.append((pages[pi], dst))
+            self.pool.unref(pages[pi])
+            pages[pi] = dst
+            self.block_tables[slot, pi] = dst
+            self.pool.counters["cow_copies"] += 1
+        return True
+
+    def _flush_copies(self) -> None:
+        """Apply all pending COW page copies to the device pool in one
+        batched gather/scatter per K/V leaf."""
+        if not self._pending_copies:
+            return
+        src = jnp.asarray([s for s, _ in self._pending_copies], jnp.int32)
+        dst = jnp.asarray([d for _, d in self._pending_copies], jnp.int32)
+        self._pending_copies = []
+
+        def copy(path, leaf):
+            if not _is_pool_leaf(path):
+                return leaf
+            return leaf.at[:, dst].set(leaf[:, src])   # (L, n_pages, ps, ...)
+
+        self.caches = jax.tree_util.tree_map_with_path(copy, self.caches)
+
+    def _register_prefixes(self, slot: int, req: Request) -> None:
+        """Publish this request's fully-prefilled prompt pages to the
+        prefix cache. K/V at a position depends only on tokens at or
+        before it (causal), so a page wholly covered by prompt tokens is
+        exactly determined by the token-id prefix that keys it."""
+        ps = self.pool.page_size
+        for pi in range(req.n_prefilled // ps):
+            if (pi + 1) * ps > len(req.prompt):
+                break
+            self.pool.register_prefix(
+                tuple(req.prompt[: (pi + 1) * ps]), self.slot_pages[slot][pi]
+            )
 
     def _record(self, tokens: np.ndarray) -> None:
         shape = tuple(tokens.shape)
@@ -509,11 +750,23 @@ class ServingEngine:
             (i, r) for i, r in enumerate(self.slots)
             if r is not None and not r.prefill_done
         ]
+        if self.paged and pre:
+            # page allocation + COW before the forward; preparation for one
+            # slot can shed another (or itself) on pool exhaustion, so
+            # re-check slot ownership after the whole pass
+            for i, r in pre:
+                if self.slots[i] is not r:
+                    continue
+                n = min(chunk, len(r.prompt) - r.n_prefilled)
+                self._prepare_slot_writes(i, n)
+            pre = [(i, r) for i, r in pre if self.slots[i] is r]
+            self._flush_copies()
         if not pre:
             return
         toks = np.zeros((self.n_slots, chunk), np.int32)
         cache_len = np.zeros((self.n_slots,), np.int32)
         mask = np.zeros((self.n_slots,), bool)
+        write_len = np.zeros((self.n_slots,), np.int32)
         n_new = {}
         for i, r in pre:
             part = r.prompt[r.n_prefilled : r.n_prefilled + chunk]
@@ -521,14 +774,15 @@ class ServingEngine:
             cache_len[i] = r.n_prefilled
             mask[i] = True
             n_new[i] = len(part)
+            write_len[i] = len(part)
         t0 = time.perf_counter()
-        logits, self.caches = self._step_fn(
-            self.params,
-            jnp.asarray(toks),
-            jnp.asarray(cache_len),
-            self.caches,
-            jnp.asarray(mask),
+        step_args = (
+            self.params, jnp.asarray(toks), jnp.asarray(cache_len),
+            self.caches, jnp.asarray(mask),
         )
+        if self.paged:
+            step_args += (jnp.asarray(self.block_tables), jnp.asarray(write_len))
+        logits, self.caches = self._step_fn(*step_args)
         logits = jax.block_until_ready(logits)
         self._record(toks)
         self._counters["prefill_forwards"] += 1
@@ -542,6 +796,8 @@ class ServingEngine:
         for i, r in pre:
             r.n_prefilled += n_new[i]
             self.cache_len[i] = r.n_prefilled
+            if self.paged:
+                self._register_prefixes(i, r)
             if r.prefill_done:
                 last_idx[i] = n_new[i] - 1
                 finishing.append((i, r))
@@ -560,21 +816,30 @@ class ServingEngine:
             (i, r) for i, r in enumerate(self.slots)
             if r is not None and r.prefill_done
         ]
+        if self.paged and dec:
+            for i, r in dec:
+                if self.slots[i] is not r:
+                    continue
+                self._prepare_slot_writes(i, 1)
+            dec = [(i, r) for i, r in dec if self.slots[i] is r]
+            self._flush_copies()
         if not dec:
             return
         toks = np.zeros((self.n_slots, 1), np.int32)
         mask = np.zeros((self.n_slots,), bool)
+        write_len = np.zeros((self.n_slots,), np.int32)
         for i, r in dec:
             toks[i, 0] = r.out_tokens[-1] if r.out_tokens else r.prompt[-1]
             mask[i] = True
+            write_len[i] = 1
         t0 = time.perf_counter()
-        logits, self.caches = self._step_fn(
-            self.params,
-            jnp.asarray(toks),
-            jnp.asarray(self.cache_len),
-            self.caches,
-            jnp.asarray(mask),
+        step_args = (
+            self.params, jnp.asarray(toks), jnp.asarray(self.cache_len),
+            self.caches, jnp.asarray(mask),
         )
+        if self.paged:
+            step_args += (jnp.asarray(self.block_tables), jnp.asarray(write_len))
+        logits, self.caches = self._step_fn(*step_args)
         logits = jax.block_until_ready(logits)
         self._record(toks)
         self._counters["decode_forwards"] += 1

@@ -1,0 +1,305 @@
+"""Paged KV cache (DESIGN.md §12): pool bookkeeping invariants, byte-exact
+engine parity paged vs dense (with and without prefix sharing), copy-on-write,
+shed-on-exhaustion (never an exception), submit-time capacity checks in
+page-pool terms, hybrid/encdec paged paths, and fp8 KV storage."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+from repro.models.attention import GARBAGE_PAGE, PagedSpec
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_pool import KVPagePool
+import repro.models.encdec as ed
+
+
+def _small_bundle(key, n_layers=2):
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=n_layers)
+    bundle = build_model(arch, Mode.DENSE)
+    return bundle, bundle.init(key)
+
+
+def _run(eng, prompts, max_tokens=5):
+    for p in prompts:
+        eng.submit(list(p), max_tokens=max_tokens)
+    done = sorted(eng.run_until_done(), key=lambda r: r.rid)
+    return [(r.rid, r.status, r.out_tokens) for r in done]
+
+
+# ---------------------------------------------------------------- pool unit
+def test_pool_alloc_free_refcount():
+    pool = KVPagePool(5, 8)
+    assert pool.n_allocatable == 4 and pool.n_free == 4
+    pages = [pool.alloc() for _ in range(4)]
+    assert GARBAGE_PAGE not in pages          # page 0 reserved for the kernel
+    assert sorted(pages) == [1, 2, 3, 4]
+    assert pool.alloc() is None               # exhausted: None, never raises
+    assert pool.counters["alloc_failures"] == 1
+
+    pool.ref(pages[0])                        # second mapper
+    assert pool.n_shared == 1
+    pool.unref(pages[0])
+    assert pool.n_shared == 0
+    for p in pages:
+        pool.unref(p)
+    assert pool.n_free == 4 and pool.n_resident == 0
+    with pytest.raises(ValueError):
+        pool.unref(pages[0])                  # double free
+    with pytest.raises(ValueError):
+        pool.ref(GARBAGE_PAGE)
+
+
+def test_pool_prefix_register_lookup_evict():
+    pool = KVPagePool(4, 2)                   # 3 allocatable pages
+    a, b = pool.alloc(), pool.alloc()
+    assert pool.register_prefix((1, 2), a)
+    assert pool.register_prefix((1, 2, 3, 4), b)
+    assert not pool.register_prefix((1, 2), 99)     # first writer wins
+    assert not pool.register_prefix((9, 9), a)      # page keeps its one key
+
+    hit = pool.lookup_prefix([1, 2, 3, 4, 5])       # longest chain, ref'd
+    assert hit == [a, b]
+    assert pool.refcount[a] == 2 and pool.refcount[b] == 2
+    assert pool.lookup_prefix([7, 7, 7]) == []
+    assert pool.counters["prefix_hits"] == 2
+
+    # retire both holders: registered pages become evictable, not free
+    for p in (a, b, a, b):
+        pool.unref(p)
+    assert pool.n_cached == 2 and pool.n_free == 1
+    # allocation prefers the free list, then evicts oldest-registered first
+    c = pool.alloc()
+    assert c not in (a, b)
+    assert pool.alloc() == a                  # LRU eviction unregisters it
+    assert pool.counters["prefix_evictions"] == 1
+    assert pool.lookup_prefix([1, 2, 9]) == []      # key is gone
+    assert not pool.needs_cow(a)              # exclusively owned again
+    assert pool.needs_cow(b)                  # still registered
+
+
+def test_pool_prefix_sharing_disabled():
+    pool = KVPagePool(4, 2, prefix_sharing=False)
+    p = pool.alloc()
+    assert not pool.register_prefix((1, 2), p)
+    assert pool.lookup_prefix([1, 2]) == []
+    pool.unref(p)
+    assert pool.n_cached == 0 and pool.n_free == 3  # straight back to free
+
+
+# ------------------------------------------------------- engine byte parity
+@pytest.mark.parametrize("sharing", [True, False])
+def test_paged_engine_matches_dense(key, sharing):
+    """Paged tokens are byte-identical to the dense engine — the paged
+    gather reproduces the dense (B, S) cache layout exactly, so logits
+    match bit for bit. Mixed prompt lengths cross page boundaries, repeat
+    a prompt (prefix hit when sharing), and chunk the long one."""
+    bundle, params = _small_bundle(key)
+    prompts = [[3, 5, 7], [11, 13, 17, 19, 23, 29, 31, 37, 41],
+               [2, 4, 6, 8, 10, 12], [3, 5, 7], [1, 2, 3, 4, 5, 6, 7, 8],
+               [11, 13, 17, 19, 23, 29, 31, 37, 41]]   # full-page prefix repeat
+    dense = ServingEngine(bundle, params, n_slots=3, max_seq=64,
+                          prefill_chunk=8, autotune_lut=False)
+    paged = ServingEngine(bundle, params, n_slots=3, max_seq=64,
+                          prefill_chunk=8, autotune_lut=False,
+                          paged=True, page_size=8, prefix_sharing=sharing)
+    assert _run(dense, prompts) == _run(paged, prompts)
+    st = paged.stats()
+    if sharing:
+        assert st["prefill_tokens_skipped"] > 0, st
+    else:
+        assert st["prefill_tokens_skipped"] == 0
+        assert st["prefix_hits"] == 0
+
+
+def test_prefix_sharing_skips_prefill_forwards(key):
+    """Requests sharing a long page-aligned prefix must skip its prefill
+    chunks entirely: fewer prefill forwards AND fewer prefill tokens than
+    the no-sharing engine, with identical tokens out."""
+    bundle, params = _small_bundle(key)
+    system = list(range(1, 25))               # 24 tokens = 3 pages of 8
+    prompts = [system + [100 + i] for i in range(4)]
+    kw = dict(n_slots=1, max_seq=64, prefill_chunk=8, autotune_lut=False,
+              paged=True, page_size=8)
+    cold = ServingEngine(bundle, params, prefix_sharing=False, **kw)
+    warm = ServingEngine(bundle, params, prefix_sharing=True, **kw)
+    assert _run(cold, prompts) == _run(warm, prompts)
+    sc, sw = cold.stats(), warm.stats()
+    assert sw["prefill_tokens_skipped"] == 3 * 24       # all but the first
+    assert sw["prefill_forwards"] < sc["prefill_forwards"]
+    assert sw["prefill_tokens"] < sc["prefill_tokens"]
+    # the shared pages stay resident at refcount 0 between requests
+    assert sw["kv_pages_cached"] >= 3
+
+
+def test_fully_cached_prompt_triggers_cow(key):
+    """A page-aligned prompt resubmitted verbatim is fully covered by the
+    prefix cache; the clamped final token must copy-on-write the shared
+    last page before its KV write — and the tokens still match dense."""
+    bundle, params = _small_bundle(key)
+    prompts = [[1, 2, 3, 4, 5, 6, 7, 8], [1, 2, 3, 4, 5, 6, 7, 8]]
+    dense = ServingEngine(bundle, params, n_slots=1, max_seq=32,
+                          prefill_chunk=8, autotune_lut=False)
+    paged = ServingEngine(bundle, params, n_slots=1, max_seq=32,
+                          prefill_chunk=8, autotune_lut=False,
+                          paged=True, page_size=8)
+    assert _run(dense, prompts) == _run(paged, prompts)
+    st = paged.stats()
+    assert st["cow_copies"] >= 1, st
+    assert st["prefill_tokens_skipped"] == 7  # clamped to len(prompt)-1
+
+
+def test_pool_exhaustion_sheds_never_raises(key):
+    """Overcommitted pool (5 requests x 41 positions into 4 pages x 8):
+    step() must never raise — victims retire with a clean "shed" status and
+    exactly one survivor completes "ok"."""
+    bundle, params = _small_bundle(key)
+    eng = ServingEngine(bundle, params, n_slots=4, max_seq=64,
+                        prefill_chunk=8, autotune_lut=False,
+                        paged=True, page_size=8, n_pages=5)
+    for i in range(5):
+        eng.submit([10 + i] * 11, max_tokens=30)
+    done = eng.run_until_done()
+    statuses = sorted(r.status for r in done)
+    assert statuses == ["ok", "shed", "shed", "shed", "shed"], statuses
+    ok = next(r for r in done if r.status == "ok")
+    assert len(ok.out_tokens) > 0
+    st = eng.stats()
+    assert st["shed"] == 4 and st["completed"] == 1
+    assert st["kv_pages_peak"] <= st["kv_pages_total"]
+
+
+def test_submit_capacity_checks_paged(key):
+    """Capacity checks speak PAGE-POOL terms (the bug fix): a prompt that
+    could never hold enough pages is rejected at submit, and max_tokens is
+    capped so a lone request completes without shedding itself."""
+    bundle, params = _small_bundle(key, n_layers=1)
+    eng = ServingEngine(bundle, params, n_slots=1, max_seq=64,
+                        prefill_chunk=8, autotune_lut=False,
+                        paged=True, page_size=8, n_pages=4)  # 3 allocatable
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(list(range(25)), max_tokens=1)   # needs 4 pages > 3
+    # boundary: exactly 3 pages of prompt is admissible
+    rid = eng.submit(list(range(24)), max_tokens=50)
+    done = eng.run_until_done()
+    req = next(r for r in done if r.rid == rid)
+    assert req.status == "ok"
+    # positions capped at 3*8=24: prompt 24 + (max_tokens-1) <= 24
+    assert len(req.out_tokens) == 1
+    assert eng.stats()["shed"] == 0
+
+
+def test_paged_engine_hybrid(key):
+    """Hybrid (shared-attn + mamba) engine: attention pools page, SSM/conv
+    state stays per-slot — tokens must match the dense engine. Mamba needs
+    chunk-aligned prompts (engine limitation). Prefix sharing must be
+    auto-disabled: skipping a prefill chunk would also skip the per-slot
+    SSM/conv state updates for those tokens, which pages cannot carry."""
+    arch = reduce_arch(get_arch("zamba2_1p2b"), n_layers=2)
+    bundle = build_model(arch, Mode.DENSE)
+    params = bundle.init(key)
+    prompts = [list(range(1, 9)), list(range(3, 7)), list(range(1, 9))]
+    dense = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                          prefill_chunk=4, autotune_lut=False)
+    paged = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                          prefill_chunk=4, autotune_lut=False,
+                          paged=True, page_size=4)
+    assert not paged.pool.prefix_sharing          # auto-disabled for hybrid
+    assert _run(dense, prompts, max_tokens=4) == _run(paged, prompts, max_tokens=4)
+    assert paged.stats()["prefill_tokens_skipped"] == 0
+
+
+def test_paged_decode_encdec(key):
+    """Whisper decoder: self-attn cache pages, cross-attn cache stays dense
+    (it is written once at cache_len==0 and never grows). Model-level
+    decode parity against the full-sequence forward."""
+    arch = reduce_arch(get_arch("whisper_tiny"))
+    m = build_model(arch, Mode.DENSE)
+    params = m.init(key)
+    B, S, S_pre = 2, 8, 5
+    page_size = 4
+    toks = jax.random.randint(key, (B, S), 0, arch.vocab)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    frames = jax.random.normal(key, (B, arch.enc_frames, arch.d_model))
+    enc_out = ed.encode(m.cfg, params, frames, compute_dtype=jnp.float32)
+    full, _ = ed.decode(
+        m.cfg, params, tokens=toks, pos=pos, enc_out=enc_out,
+        compute_dtype=jnp.float32,
+    )
+
+    n_tables = S // page_size
+    spec = PagedSpec(n_pages=B * n_tables + 1, page_size=page_size)
+    caches = m.init_caches(B, S, dtype=jnp.float32, paged=spec)
+    # dense-equivalent block tables: row b owns pages 1+b*P .. (b+1)*P
+    bt = jnp.asarray(
+        [[1 + b * n_tables + p for p in range(n_tables)] for b in range(B)],
+        jnp.int32,
+    )
+    tol = dict(rtol=5e-3, atol=5e-3)
+    batch = {"tokens": toks[:, :S_pre], "cache_len": jnp.zeros((B,), jnp.int32),
+             "frames": frames, "block_tables": bt}
+    lg, caches = m.forward_step(params, batch, caches, compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, :S_pre]), **tol)
+    for i in range(S_pre, S):
+        lg, caches = m.forward_step(
+            params, {"tokens": toks[:, i : i + 1],
+                     "cache_len": jnp.full((B,), i, jnp.int32),
+                     "block_tables": bt},
+            caches, compute_dtype=jnp.float32,
+        )
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]), **tol)
+
+
+# ------------------------------------------------------------------ fp8 KV
+def test_fp8_kv_engine_parity_dense_vs_paged(key):
+    """fp8 KV storage (attention upcasts at the dot): the dense and paged
+    engines quantize identically, so their tokens stay byte-identical."""
+    bundle, params = _small_bundle(key)
+    prompts = [[3, 5, 7, 9, 11], [2, 4, 6], [3, 5, 7, 9, 11]]
+    dense = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                          prefill_chunk=4, autotune_lut=False,
+                          kv_dtype="float8_e4m3fn")
+    paged = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                          prefill_chunk=4, autotune_lut=False,
+                          paged=True, page_size=4, kv_dtype="float8_e4m3fn")
+    for eng, leaf_name in ((dense, "k"), (paged, "k_pool")):
+        leaves = jax.tree_util.tree_flatten_with_path(eng.caches)[0]
+        kv = [l for p, l in leaves
+              if getattr(p[-1], "key", None) in (leaf_name, "v", "v_pool")]
+        assert kv and all(l.dtype == jnp.float8_e4m3fn for l in kv)
+    assert _run(dense, prompts, max_tokens=4) == _run(paged, prompts, max_tokens=4)
+
+
+def test_fp8_kv_decode_close_to_f32(key):
+    """fp8 KV decode must stay CLOSE to the f32-cache decode (quantization
+    noise only) — backs the attention.py claim that K/V are upcast at use,
+    not accumulated in 8 bits."""
+    bundle, params = _small_bundle(key, n_layers=1)
+    prompt = [3, 5, 7, 9, 11, 13]
+
+    def greedy_logits(kv_dtype):
+        caches = bundle.init_caches(1, 32, dtype=kv_dtype)
+        toks = jnp.asarray([prompt], jnp.int32)
+        lg, caches = bundle.forward_step(
+            params, {"tokens": toks, "cache_len": jnp.zeros((1,), jnp.int32)},
+            caches, compute_dtype=jnp.float32,
+        )
+        out = [lg[0, len(prompt) - 1]]
+        for i in range(3):
+            lg, caches = bundle.forward_step(
+                params,
+                {"tokens": jnp.asarray([[1 + i]], jnp.int32),
+                 "cache_len": jnp.full((1,), len(prompt) + i, jnp.int32)},
+                caches, compute_dtype=jnp.float32,
+            )
+            out.append(lg[0, 0])
+        return jnp.stack(out)
+
+    ref = greedy_logits(jnp.float32)
+    fp8 = greedy_logits(jnp.float8_e4m3fn)
+    assert jnp.isfinite(fp8).all()
+    # fp8 mantissa is 3 bits → expect percent-level drift, not garbage
+    err = jnp.abs(fp8 - ref).max() / (jnp.abs(ref).max() + 1e-6)
+    assert float(err) < 0.15, float(err)

@@ -72,6 +72,64 @@ def test_sharded_engine_matches_unsharded_tp2():
     assert "SHARDED_ENGINE_OK" in out
 
 
+def test_paged_sharded_engine_matches_dense_tp2():
+    """Paged engine under a 2-device mesh: pool leaves shard on the page
+    axis (KV heads over "model"), and tokens are byte-identical to the
+    unsharded dense engine — including requests that hit the prefix cache
+    and the fully-cached-prompt COW path."""
+    out = run_with_devices(
+        textwrap.dedent(
+            """
+            import jax
+            from repro.configs import build_model, get_arch, reduce_arch
+            from repro.core.amm import Mode
+            from repro.launch.mesh import make_host_mesh
+            from repro.serving.engine import ServingEngine
+
+            arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2)
+            bundle = build_model(arch, Mode.LUT_INFER)
+            params = bundle.init(jax.random.PRNGKey(0))
+
+            ref = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                                prefill_chunk=4, autotune_lut=False)
+            mesh = make_host_mesh(data=1, model=2)
+            eng = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                                prefill_chunk=4, autotune_lut=False,
+                                mesh=mesh, paged=True, page_size=4)
+
+            from repro.checkpoint.checkpointer import tree_paths
+
+            pool = [(p, l) for p, l in zip(tree_paths(eng.caches),
+                                           jax.tree_util.tree_leaves(eng.caches))
+                    if p.endswith("_pool")]
+            assert pool, "paged engine has no pool leaves"
+            for p, l in pool:
+                want = eng.rules.cache_spec(p, l.shape, 2)
+                assert l.sharding.spec == want, (p, l.sharding.spec, want)
+                assert l.sharding.spec[3] == "model", (p, l.sharding.spec)
+
+            # same prompt twice -> prefix hit; the page-aligned prompt is
+            # fully cached on resubmit -> clamp + copy-on-write
+            prompts = [[1, 2, 3, 4, 5, 6, 7], [9, 8, 7],
+                       [1, 2, 3, 4, 5, 6, 7], [1, 2, 3, 4]]
+            for e in (ref, eng):
+                for p in prompts:
+                    e.submit(p, max_tokens=5)
+            o_ref = [(r.rid, r.out_tokens) for r in
+                     sorted(ref.run_until_done(), key=lambda r: r.rid)]
+            o_tp = [(r.rid, r.out_tokens) for r in
+                    sorted(eng.run_until_done(), key=lambda r: r.rid)]
+            assert o_ref == o_tp, (o_ref, o_tp)
+            st = eng.stats()
+            assert st["prefill_tokens_skipped"] > 0, st
+            print("PAGED_TP_OK")
+            """
+        ),
+        n_devices=2,
+    )
+    assert "PAGED_TP_OK" in out
+
+
 def test_artifact_to_sharded_engine_tp2(tmp_path):
     """The full deploy hand-off onto a mesh: artifact saved single-device,
     loaded in a 2-device process, served tensor-parallel — same tokens."""
