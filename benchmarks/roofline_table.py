@@ -30,12 +30,16 @@ def print_kernel_axis() -> None:
         return
     print("# Kernel axis (from BENCH_kernels.json; model_us = v5e projection)")
     print("op,dense_roofline_us,lut_xla_roofline_us,v1_model_us,v2_model_us,"
-          "blocks")
+          "fused_model_us,tuned,blocks")
     for r in rs:
+        fused = r.get("fused_model_us")
+        fused_s = f"{fused:.1f}" if isinstance(fused, (int, float)) else "nan"
+        tuned = f"v{r.get('tuned_version', 2)}/" \
+                + ("meas" if r.get("tuned_measured") else "model")
         print(
             f"{r['op']},{r['tpu_roofline_dense_us']:.1f},"
             f"{r['tpu_roofline_lut_us']:.1f},{r['v1_model_us']:.1f},"
-            f"{r['v2_model_us']:.1f},"
+            f"{r['v2_model_us']:.1f},{fused_s},{tuned},"
             f"{r['tuned_block_n']}x{r['tuned_block_m']}x{r['tuned_block_c']}"
         )
 

@@ -113,7 +113,11 @@ def lut_linear(
             from repro.kernels import ops  # local import: kernels are optional
 
             # bias rides the kernel's fused epilogue (DESIGN.md §2.3) — no
-            # separate elementwise pass over the (N, M) output.
+            # separate elementwise pass over the (N, M) output. The kernel
+            # generation (v1 / v2 / fused-decode) is NOT pinned here:
+            # ops.lut_amm consults the per-shape autotune record — measured
+            # wall-clock winners when available (DESIGN.md §13.3) — so every
+            # LUT site runs whichever kernel actually wins on its shape.
             y = ops.lut_amm(xf, P, qt.q, qt.scale, bias=b)
         else:
             if cfg.int8_dot:

@@ -57,9 +57,11 @@ def deploy_params(
 ) -> dict[str, Any]:
     """Materialize the inference LUT: int8 table + scales (drops the weight)."""
     table = pq.build_table(trainable["centroids"], frozen["w"], stop_weight_grad=False)
-    # int8_dot and the fused v2 kernel both want the m-shared (1,1,M) scale
-    # layout: it factors out of the codebook sum, so the kernel accumulates
-    # raw int32 and dequantizes once per output tile (DESIGN.md §2.3).
+    # int8_dot and the Pallas kernels (v2 and the fused decode kernel) all
+    # want the m-shared (1,1,M) scale layout: it factors out of the codebook
+    # sum, so the kernel accumulates raw int32 — exact integer arithmetic,
+    # which is what makes v2 and fused byte-identical — and dequantizes once
+    # per output tile (DESIGN.md §2.3, §13.1).
     qt = quant.quantize_table(
         table, bits=cfg.bits, per_column=cfg.per_column,
         m_shared=cfg.int8_dot or cfg.use_kernel,

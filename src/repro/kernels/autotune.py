@@ -1,7 +1,9 @@
-"""Shape-keyed block-size autotuner for the LUT Pallas kernels (DESIGN.md §3).
+"""Shape-keyed block-size + kernel-version autotuner for the LUT Pallas
+kernels (DESIGN.md §3, §13).
 
-The fused kernels tile over a (N/bn, M/bm, C/bc) grid; the block sizes trade
-VMEM residency against HBM re-streaming:
+The lut_amm kernels tile over a (N/bn, M/bm, C/bc) grid (v1/v2) or a
+(N/bn, M/bm) grid with the whole codebook axis VMEM-resident (fused, v3);
+the block sizes trade VMEM residency against HBM re-streaming:
 
   * bigger bn  -> the int8 table tile is re-read fewer times (N/bn sweeps)
   * bigger bm  -> the activation tile is re-read fewer times (M/bm sweeps)
@@ -9,20 +11,34 @@ VMEM residency against HBM re-streaming:
 
 All three are capped by the per-step VMEM working set (`vmem_bytes`), which
 must fit in 16 MB with double buffering — the budget model is documented in
-DESIGN.md §3.1 and enforced by `enumerate_candidates`.
+DESIGN.md §3.1/§13.1 and enforced by `enumerate_candidates`.
+
+The kernel *version* is a tunable axis alongside the block sizes
+(DESIGN.md §13.2): `tune` sweeps v1 (fp32 dequant per step), v2 (int8-native
+scratch accumulation) and v3 (fused encode→lookup decode,
+`repro.kernels.fused_decode`) for every `lut_amm` shape and records the
+winner in the cache entry (`"version"`). `kernel_choice` is the hot-path
+consumer: record (measured or analytic) wins; with no record a fallback
+rule applies (v1 for small-M interpret-mode shapes — the measured regime
+where v2's emulation overhead loses — else the fused kernel when its
+all-of-C working set fits VMEM, else v2).
 
 Tuning modes:
 
-  * measured  — a `measure(cfg) -> seconds` callable (real wall-clock on an
-    accelerator; benchmarks pass one built from `lut_amm_pallas`).
+  * measured  — a `measure(cfg[, version]) -> seconds` callable (real
+    wall-clock on the live backend; `repro.kernels.measure` builds one:
+    compiled runs, warmup + median-of-k).
   * analytic  — no accelerator present: candidates are scored with the
     roofline model in `predict_us` (HBM traffic / compute / per-step
     overhead), using the v5e constants from repro.roofline.analysis.
 
 Winners persist to an on-disk JSON cache (DESIGN.md §3.2) keyed by
 (kind, N, M, C, K, V, dtype, backend) and are consumed by `lut_amm_pallas`,
-`encode_pallas`, the serving engine warmup, and the benchmarks. Cache path:
-$REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json.
+`encode_pallas`, `ops.lut_amm` dispatch, the serving engine warmup, and the
+benchmarks; records carry `measured: bool` so a wall-clock winner is never
+silently replaced by an analytic one (precedence: measured > artifact
+snapshot > analytic — DESIGN.md §13.3). Cache path: $REPRO_AUTOTUNE_CACHE,
+else ~/.cache/repro/autotune.json.
 """
 
 from __future__ import annotations
@@ -51,6 +67,20 @@ STEP_OVERHEAD_S = 1e-6           # fixed per-grid-step cost (DMA setup, sync)
 
 _CACHE_VERSION = 1
 _ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+
+# lut_amm kernel generations swept by `tune` (DESIGN.md §13.2):
+#   1 = lut_amm_pallas_v1 (fp32 dequant per codebook step)
+#   2 = lut_amm_pallas    (int8-native, VMEM scratch accumulation)
+#   3 = fused_decode_pallas (encode once per N tile, codes VMEM-resident)
+KERNEL_VERSIONS = (1, 2, 3)
+VERSION_FUSED = 3
+
+# fallback rule threshold (no cache record): in interpret mode — the only
+# mode without an accelerator to measure on — BENCH_kernels.json shows v1
+# beating v2 on small-M rows (the scratch/epilogue machinery costs more than
+# the dequant it saves under emulation), so small-M interpret shapes default
+# to v1 rather than pinning a losing version.
+_SMALL_M_V1 = 512
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +115,12 @@ def vmem_bytes(
     Input tiles are charged twice (the pipeline emitter double-buffers HBM
     streams); the scratch accumulator and the output tile are single-buffered
     because their BlockSpec index maps ignore the innermost grid axis.
+
+    kind="fused" (DESIGN.md §13.1): bc must equal C — the fused decode
+    kernel keeps the whole codebook axis resident so the encode runs once
+    per N tile. Its working set adds the int8 code scratch (bn·C·K) and a
+    contraction temporary, but drops the per-step accumulator (each output
+    tile is written in a single grid step).
     """
     x_tile = bn * bc * v * 4                 # fp32 activations
     p_tile = bc * k * v * 4                  # fp32 codebook
@@ -94,8 +130,12 @@ def vmem_bytes(
     t_tile = bc * k * bm                     # int8 table — stays int8 (v2)
     s_tile = bc * bm * 4                     # scale tile upper bound
     b_tile = bm * 4                          # fused bias row
-    acc = bn * bm * 4                        # int32/f32 scratch accumulator
     out = bn * bm * 4                        # fp32 output tile
+    if kind == "fused":
+        codes = bn * bc * k                  # int8 one-hot scratch (all of C)
+        tmp = bn * bm * 8                    # int32 + fp32 contraction temp
+        return 2 * (x_tile + t_tile) + p_tile + s_tile + b_tile + codes + out + tmp
+    acc = bn * bm * 4                        # int32/f32 scratch accumulator
     return 2 * (x_tile + p_tile + t_tile + s_tile + b_tile) + acc + out
 
 
@@ -124,9 +164,29 @@ def predict_us(
     dequant is charged additively (not under the roofline max): it is a
     serial VPU pass between the DMA and the MXU contraction that consumes
     its output, so it overlaps with neither.
+
+    version=3 models the fused decode kernel (DESIGN.md §13.1): the encode
+    matmul is charged ONCE per token (codes persist in VMEM scratch across
+    the M sweep instead of being recomputed per M block), the activation
+    tile is read once (its index map ignores the M axis), the codebook is
+    resident for the whole grid, and codes never round-trip through HBM.
     """
     gn, gm = _ceil_div(n, bn), (1 if kind == "encode" else _ceil_div(m, bm))
     gc = _ceil_div(c, bc)
+
+    if kind != "encode" and version >= VERSION_FUSED:
+        hbm = (
+            n * c * v * 4                    # x read once (index map ignores M)
+            + c * k * v * 4                  # codebook resident across the grid
+            + c * k * m * gn                 # int8 table, re-read per N sweep
+            + n * m * 4                      # output written exactly once
+        )
+        t_comp = (
+            2.0 * n * c * v * k / MXU_F32    # encode: once, not per M block
+            + 2.0 * n * c * k * m / MXU_I8   # int8 table contraction
+        )
+        t_steps = gn * gm * STEP_OVERHEAD_S
+        return (max(hbm / HBM_BW, t_comp) + t_steps) * 1e6
 
     x_bytes = n * c * v * 4 * gm
     p_bytes = c * k * v * 4 * gn * gm
@@ -166,13 +226,16 @@ def enumerate_candidates(
     kind: str, n: int, m: int, c: int, k: int, v: int,
     *, budget: int = VMEM_BUDGET,
 ) -> Iterator[BlockConfig]:
-    """All tilings under the VMEM budget. Always yields at least one."""
+    """All tilings under the VMEM budget. Always yields at least one, except
+    kind="fused", where bc is pinned to C (the whole codebook axis must be
+    VMEM-resident) — an empty sweep there means the fused kernel is not a
+    legal choice for this shape and the version sweep falls back to v1/v2."""
     bns = sorted({min(b, n) for b in _BN_CHOICES})
     if kind == "encode":
         bms = [0]
     else:
         bms = sorted({min(b, m) for b in _BM_CHOICES})
-    bcs = _divisors(c)
+    bcs = [c] if kind == "fused" else _divisors(c)
     emitted = False
     for bn in bns:
         for bm in bms:
@@ -181,12 +244,22 @@ def enumerate_candidates(
                     continue
                 emitted = True
                 yield BlockConfig(bn, bm, bc)
-    if not emitted:                           # degenerate: smallest tiling
+    if not emitted and kind != "fused":       # degenerate: smallest tiling
         yield BlockConfig(min(8, n), 0 if kind == "encode" else min(128, m), 1)
 
 
 def heuristic(kind: str, n: int, m: int, c: int, k: int, v: int) -> BlockConfig:
-    """Cache-miss default — the pre-autotuner hardcoded tiling."""
+    """Cache-miss default — the pre-autotuner hardcoded tiling.
+
+    kind="fused": bc is pinned to C; bn/bm halve until the all-of-C working
+    set fits the budget (feasibility is pre-checked by `kernel_choice`)."""
+    if kind == "fused":
+        bn, bm = min(128, n), min(512, m)
+        while bn > 8 and vmem_bytes(bn, bm, c, k, v, kind="fused") > VMEM_BUDGET:
+            bn //= 2
+        while bm > 128 and vmem_bytes(bn, bm, c, k, v, kind="fused") > VMEM_BUDGET:
+            bm //= 2
+        return BlockConfig(bn, bm, c)
     bn = min(512 if kind == "encode" else 256, n)
     bm = 0 if kind == "encode" else min(512, m)
     bc = max(1, min(c, 2048 // max(v, 1)))
@@ -253,6 +326,7 @@ class AutotuneCache:
 
 _DEFAULT_CACHE: AutotuneCache | None = None
 _MEMO: dict[str, BlockConfig] = {}
+_MEMO_CHOICE: dict[str, tuple[int, BlockConfig, bool]] = {}
 
 
 def get_cache() -> AutotuneCache:
@@ -264,6 +338,7 @@ def get_cache() -> AutotuneCache:
 
 def _memo_clear() -> None:
     _MEMO.clear()
+    _MEMO_CHOICE.clear()
 
 
 def _backend() -> str:
@@ -326,43 +401,155 @@ def resolve_blocks(
     return bn, bm, bc
 
 
+def _measure_accepts_version(measure: Callable) -> bool:
+    """Whether a measure callable takes (cfg, version) or just (cfg)."""
+    import inspect
+
+    try:
+        params = list(inspect.signature(measure).parameters.values())
+    except (TypeError, ValueError):
+        return False
+    if any(p.kind == inspect.Parameter.VAR_POSITIONAL for p in params):
+        return True
+    positional = [p for p in params if p.kind in (
+        inspect.Parameter.POSITIONAL_ONLY,
+        inspect.Parameter.POSITIONAL_OR_KEYWORD,
+    )]
+    return len(positional) >= 2
+
+
+def best_analytic(
+    kind: str, n: int, m: int, c: int, k: int, v: int, *, version: int = 2,
+) -> tuple[BlockConfig | None, float]:
+    """Best roofline-scored tiling for ONE kernel version; (None, inf) when
+    no legal tiling exists (fused over VMEM budget). Used by the benchmarks
+    for per-version model projections without touching the cache."""
+    cand_kind = "fused" if (kind == "lut_amm" and version >= VERSION_FUSED) else kind
+    best_cfg, best_t = None, math.inf
+    for cand in enumerate_candidates(cand_kind, n, m, c, k, v):
+        t_us = predict_us(kind, n, m, c, k, v,
+                          cand.block_n, cand.block_m, cand.block_c,
+                          version=version)
+        if t_us < best_t:
+            best_cfg, best_t = cand, t_us
+    return best_cfg, best_t
+
+
 def tune(
     kind: str, n: int, m: int, c: int, k: int, v: int,
     *, dtype: str = "float32", backend: str | None = None,
     cache: AutotuneCache | None = None,
-    measure: Callable[[BlockConfig], float] | None = None,
-    version: int = 2,
+    measure: Callable[..., float] | None = None,
+    versions: tuple[int, ...] | None = None,
     save: bool = True,
 ) -> tuple[BlockConfig, dict[str, Any]]:
-    """Pick the best tiling for one shape and persist it.
+    """Pick the best (version, tiling) for one shape and persist it.
 
-    measure: optional `cfg -> seconds` wall-clock callable; when absent the
-    analytic `predict_us` model scores candidates (the only option without
-    an accelerator).
+    measure: optional wall-clock callable — `(cfg, version) -> seconds`
+    (or legacy `(cfg) -> seconds`); when absent the analytic `predict_us`
+    model scores candidates (the only option without an accelerator).
+    Candidates that raise or return inf never win, so illegal tilings on
+    the live backend are skipped rather than fatal.
+
+    versions: kernel generations to sweep; defaults to KERNEL_VERSIONS for
+    kind="lut_amm" (v1/v2/fused is a tunable axis — DESIGN.md §13.2) and a
+    single version otherwise. The winning version lands in the record.
     """
     backend = backend or _backend()
     cache = cache or get_cache()
     key = shape_key(kind, n, m, c, k, v, dtype, backend)
+    if versions is None:
+        versions = KERNEL_VERSIONS if kind == "lut_amm" else (2,)
+    measured = measure is not None
+    pass_version = measured and _measure_accepts_version(measure)
 
-    best_cfg, best_t, measured = None, math.inf, measure is not None
-    for cand in enumerate_candidates(kind, n, m, c, k, v):
-        if measure is not None:
-            t_us = measure(cand) * 1e6
-        else:
-            t_us = predict_us(kind, n, m, c, k, v,
-                              cand.block_n, cand.block_m, cand.block_c,
-                              version=version)
-        if t_us < best_t:
-            best_cfg, best_t = cand, t_us
+    best_cfg, best_t, best_ver = None, math.inf, versions[0]
+    for ver in versions:
+        cand_kind = "fused" if (kind == "lut_amm" and ver >= VERSION_FUSED) else kind
+        for cand in enumerate_candidates(cand_kind, n, m, c, k, v):
+            if measure is not None:
+                try:
+                    t_us = (measure(cand, ver) if pass_version
+                            else measure(cand)) * 1e6
+                except Exception:
+                    continue
+            else:
+                t_us = predict_us(kind, n, m, c, k, v,
+                                  cand.block_n, cand.block_m, cand.block_c,
+                                  version=ver)
+            if t_us < best_t:
+                best_cfg, best_t, best_ver = cand, t_us, ver
 
-    assert best_cfg is not None
+    if best_cfg is None or not math.isfinite(best_t):
+        # every measured candidate failed (e.g. backend can't run the
+        # kernels at all) — fall back to the analytic ranking rather than
+        # persisting nothing
+        measured = False
+        for ver in versions:
+            cand_kind = "fused" if (kind == "lut_amm" and ver >= VERSION_FUSED) else kind
+            for cand in enumerate_candidates(cand_kind, n, m, c, k, v):
+                t_us = predict_us(kind, n, m, c, k, v,
+                                  cand.block_n, cand.block_m, cand.block_c,
+                                  version=ver)
+                if t_us < best_t:
+                    best_cfg, best_t, best_ver = cand, t_us, ver
+
+    assert best_cfg is not None, f"no legal tiling for {key}"
     record = {
         **best_cfg.as_dict(),
         "predicted_us": best_t,
         "measured": measured,
         "source": "wallclock" if measured else "roofline_model",
     }
+    if kind == "lut_amm":
+        record["version"] = best_ver
     cache.put(key, record)
     if save:
         cache.save()
     return best_cfg, record
+
+
+def kernel_choice(
+    n: int, m: int, c: int, k: int, v: int,
+    *, dtype: str = "float32", backend: str | None = None,
+    interpret: bool = False,
+    cache: AutotuneCache | None = None,
+) -> tuple[int, BlockConfig, bool]:
+    """Hot-path (version, blocks, from_record) selection for `ops.lut_amm`.
+
+    Precedence (DESIGN.md §13.3): the cache record — measured or analytic,
+    including records restored from an artifact snapshot — always wins, so
+    callers never pin a version the tuner has seen lose. Records written
+    before the version axis existed (no "version" key) mean v2, the default
+    those callers ran. With no record at all, the fallback rule:
+
+      * interpret mode and M <= 512  -> v1 (BENCH_kernels.json shows v2
+        losing to v1 under emulation on small-M rows);
+      * fused working set fits VMEM  -> v3 (analytically dominant: encode
+        runs once instead of once per M block);
+      * otherwise                    -> v2.
+    """
+    backend = backend or _backend()
+    key = shape_key("lut_amm", n, m, c, k, v, dtype, backend)
+    memo_key = None
+    if cache is None:
+        cache = get_cache()
+        memo_key = f"{cache.path}|interpret={interpret}|{key}"
+        if memo_key in _MEMO_CHOICE:
+            return _MEMO_CHOICE[memo_key]
+    rec = cache.get(key)
+    if rec is not None:
+        out = (
+            int(rec.get("version", 2)),
+            BlockConfig(rec["block_n"], rec["block_m"], rec["block_c"]),
+            True,
+        )
+    elif interpret and m <= _SMALL_M_V1:
+        out = (1, heuristic("lut_amm", n, m, c, k, v), False)
+    elif next(iter(enumerate_candidates("fused", n, m, c, k, v)), None) is not None:
+        out = (VERSION_FUSED, heuristic("fused", n, m, c, k, v), False)
+    else:
+        out = (2, heuristic("lut_amm", n, m, c, k, v), False)
+    if memo_key is not None:
+        _MEMO_CHOICE[memo_key] = out
+    return out

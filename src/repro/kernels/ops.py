@@ -1,22 +1,30 @@
-"""jit'd public wrappers for the LUT kernels with platform dispatch.
+"""jit'd public wrappers for the LUT kernels with platform + version dispatch.
 
-`lut_amm` runs the fused Pallas kernel on TPU and transparently falls back to
-interpret mode elsewhere (this container is CPU-only: interpret=True executes
-the kernel body in Python for correctness validation; the XLA one-hot path in
-repro.core.pq is the production fallback used by the distributed dry-run).
+`lut_amm` runs the fused Pallas kernels on TPU and transparently falls back
+to interpret mode elsewhere (this container is CPU-only: interpret=True
+executes the kernel body in Python for correctness validation; the XLA
+one-hot path in repro.core.pq is the production fallback used by the
+distributed dry-run).
 
-The default entry points are the v2 kernels (int8-native MXU table read,
-VMEM scratch accumulation, fused bias/activation epilogue — DESIGN.md §2.3)
-with autotuned block sizes (DESIGN.md §3). `lut_amm_v1` keeps the original
-kernel callable for side-by-side benchmarking.
+Kernel-version selection per shape comes from the autotune record
+(`autotune.kernel_choice`, DESIGN.md §13.3) — measured wall-clock winners
+when available, the analytic ranking otherwise, and a no-record fallback
+rule (v1 for small-M interpret-mode shapes, else the fused v3 kernel when
+its working set fits VMEM, else v2) — so callers never pin a losing
+version. Pass `version=` (1 | 2 | 3) to force a generation; passing any
+explicit block size keeps the historical v2 behavior unless `version` says
+otherwise.
 """
 
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.dist_argmin import encode_pallas
-from repro.kernels.lut_amm import lut_amm_pallas, lut_amm_pallas_v1
+from repro.kernels.fused_decode import fused_decode_pallas
+from repro.kernels.lut_amm import _apply_act, lut_amm_pallas, lut_amm_pallas_v1
 from repro.kernels.ref import encode_ref, lut_amm_ref
 
 
@@ -35,23 +43,47 @@ def lut_amm(
     block_n: int | None = None,
     block_m: int | None = None,
     block_c: int | None = None,
+    version: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused LUT-NN approximate matmul (v2): (N, D) -> (N, M)."""
+    """LUT-NN approximate matmul, autotuned dispatch: (N, D) -> (N, M)."""
     if interpret is None:
         interpret = not _on_tpu()
-    return lut_amm_pallas(
-        x,
-        centroids,
-        table_q,
-        scale,
-        bias=bias,
-        act=act,
-        block_n=block_n,
-        block_m=block_m,
-        block_c=block_c,
-        interpret=interpret,
+    n, _ = x.shape
+    c, k, v = centroids.shape
+    m = table_q.shape[-1]
+    if version is None:
+        if block_n is None and block_m is None and block_c is None:
+            version, cfg, _ = autotune.kernel_choice(
+                n, m, c, k, v, dtype=str(x.dtype), interpret=interpret
+            )
+            block_n, block_m, block_c = cfg.block_n, cfg.block_m, cfg.block_c
+        else:
+            version = 2        # explicit blocks, no version: historical v2
+    if version >= autotune.VERSION_FUSED:
+        return fused_decode_pallas(
+            x, centroids, table_q, scale, bias=bias, act=act,
+            block_n=block_n, block_m=block_m, interpret=interpret,
+        )
+    if version == 2:
+        return lut_amm_pallas(
+            x, centroids, table_q, scale, bias=bias, act=act,
+            block_n=block_n, block_m=block_m, block_c=block_c,
+            interpret=interpret,
+        )
+    # v1 has no fused epilogue and wants (C, ...) scale layouts: broadcast
+    # m-shared scales and apply bias/activation outside the kernel so the
+    # three generations stay drop-in interchangeable.
+    s = scale if scale.shape[0] == c else jnp.broadcast_to(scale, (c, 1, scale.shape[-1]))
+    y = lut_amm_pallas_v1(
+        x, centroids, table_q, s,
+        block_n=block_n if block_n is not None else 256,
+        block_m=block_m if block_m is not None else 512,
+        block_c=block_c, interpret=interpret,
     )
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return _apply_act(y, act).astype(y.dtype)
 
 
 def lut_amm_v1(
@@ -96,4 +128,28 @@ def encode(
     )
 
 
-__all__ = ["lut_amm", "lut_amm_v1", "encode", "lut_amm_ref", "encode_ref"]
+def lut_amm_fused(
+    x: jax.Array,
+    centroids: jax.Array,
+    table_q: jax.Array,
+    scale: jax.Array,
+    *,
+    bias: jax.Array | None = None,
+    act: str = "none",
+    block_n: int | None = None,
+    block_m: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused encode→lookup decode kernel (v3), explicitly."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return fused_decode_pallas(
+        x, centroids, table_q, scale, bias=bias, act=act,
+        block_n=block_n, block_m=block_m, interpret=interpret,
+    )
+
+
+__all__ = [
+    "lut_amm", "lut_amm_v1", "lut_amm_fused", "encode",
+    "lut_amm_ref", "encode_ref",
+]

@@ -179,7 +179,7 @@ def main(argv: list[str] | None = None) -> None:
     done = eng.run_until_done()
     dt = max(time.time() - t0, 1e-9)
     total_tok = sum(len(r.out_tokens) for r in done)
-    mode = "pallas-v2 kernel" if use_kernel else "XLA one-hot"
+    mode = "pallas kernel (autotuned v1/v2/fused)" if use_kernel else "XLA one-hot"
     st = eng.stats()
     tp = f", tp={args.tp}" if mesh is not None else ""
     print(f"{len(done)} requests, {total_tok} tokens in {dt:.1f}s "

@@ -295,8 +295,11 @@ def _load_resolved(directory: pathlib.Path, *, restore_autotune: bool) -> LUTArt
 def restore_autotune_snapshot(directory: str | os.PathLike) -> int:
     """Merge the artifact's autotune winners into the process cache.
 
-    Existing entries win (a live measured winner beats a shipped analytic
-    one); returns the number of entries merged. Persistence failures are
+    Precedence is measured > snapshot > analytic (DESIGN.md §13.3): a
+    snapshot entry fills a hole, and a *measured* snapshot entry (wall-clock
+    timed on real hardware at deploy time, `measured: true`) additionally
+    replaces a live analytic projection — but never a live measured winner.
+    Returns the number of entries merged. Persistence failures are
     swallowed — the snapshot is an optimization, never a load dependency.
     """
     path = pathlib.Path(directory) / _AUTOTUNE
@@ -306,7 +309,11 @@ def restore_autotune_snapshot(directory: str | os.PathLike) -> int:
         raw = json.loads(path.read_text())
         entries = raw["entries"] if raw.get("version") == 1 else {}
         for key, rec in entries.items():
-            if cache.get(key) is None:
+            have = cache.get(key)
+            if have is None or (
+                isinstance(rec, dict) and rec.get("measured")
+                and not have.get("measured")
+            ):
                 cache.put(key, dict(rec))
                 merged += 1
     except (OSError, ValueError, KeyError, TypeError, AttributeError):

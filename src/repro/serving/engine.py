@@ -125,23 +125,31 @@ def iter_lut_kernel_sites(cfg: Any, _seen: set[int] | None = None) -> Iterator[A
 def warm_lut_autotune(
     bundle: ModelBundle, token_counts: list[int], dtype: str = "float32"
 ) -> int:
-    """Pre-tune kernel block sizes for every (LUT site x token count) pair.
+    """Pre-tune kernel version + block sizes for every (LUT site x token
+    count) pair.
 
     `dtype` must be the dtype the LUT sites will actually see at runtime
     (the engine's compute dtype) — the kernel keys its cache lookups on
     `str(x.dtype)`, so a mismatched dtype warms keys nobody reads.
 
-    Uses the analytic roofline model off-accelerator (fast: pure python),
-    real wall-clock on TPU is wired by the benchmarks. Returns the number of
-    (site, N) shapes tuned; winners persist in the autotune JSON cache.
-    Shapes that already have a cached winner — e.g. restored from a
-    LUTArtifact's autotune snapshot, possibly wall-clock-measured on real
-    hardware — are left untouched rather than re-derived analytically.
+    Default scoring is the analytic roofline model (fast: pure python); with
+    REPRO_AUTOTUNE_MEASURE=1 each candidate (tiling × v1/v2/fused) is
+    instead timed with compiled runs on the live backend
+    (repro.kernels.measure — warmup + median-of-k), which is the honest
+    mode on a real accelerator. Returns the number of (site, N) shapes
+    tuned; winners persist in the autotune JSON cache.
+
+    Record precedence (DESIGN.md §13.3): measured records — whether from a
+    previous measured warmup or restored from a LUTArtifact's autotune
+    snapshot — are never re-derived. Analytic records are kept as-is in
+    analytic mode but are RE-TUNED when measurement is enabled: a measured
+    winner always beats a projection.
     """
     from repro.core.amm import Mode
-    from repro.kernels import autotune
+    from repro.kernels import autotune, measure
 
     backend = jax.default_backend()
+    measure_live = measure.measure_enabled()
     cache = autotune.get_cache()
     tuned = set()
     # site registry walk (DESIGN.md §9.2): one entry per (site, layer), so
@@ -155,9 +163,14 @@ def warm_lut_autotune(
             key = ("lut_amm", n, site.d_out, c, lut.k, lut.v)
             if key in tuned:
                 continue
-            if cache.get(autotune.shape_key(*key, dtype, backend)) is not None:
+            rec = cache.get(autotune.shape_key(*key, dtype, backend))
+            if rec is not None and (not measure_live or rec.get("measured")):
                 continue
-            autotune.tune(*key, dtype=dtype, save=False)
+            measure_fn = (
+                measure.measure_lut_amm(*key[1:], dtype=dtype)
+                if measure_live else None
+            )
+            autotune.tune(*key, dtype=dtype, save=False, measure=measure_fn)
             tuned.add(key)
     if tuned:
         try:

@@ -172,6 +172,40 @@ def test_artifact_autotune_snapshot_restores(key, tmp_path, monkeypatch):
         autotune.get_cache().get(key_str)["block_n"] == 1
 
 
+def test_artifact_snapshot_measured_precedence(key, tmp_path, monkeypatch):
+    """Measured > snapshot > analytic (DESIGN.md §13.3): records round-trip
+    their `measured`/`version` fields through the artifact snapshot, a
+    MEASURED snapshot entry replaces a live analytic one, and no snapshot
+    entry ever replaces a live measured winner."""
+    bundle, params = _deployed_bundle(key, lut_use_kernel=True)
+    shape = ("lut_amm", 8, 128, 8, 16, 16)       # reduced-qwen3 site signature
+    key_str = autotune.shape_key(*shape, "float32", "cpu")
+
+    # ship a MEASURED winner (as a real accelerator deploy would)
+    autotune.tune(*shape, dtype="float32", backend="cpu",
+                  measure=lambda cfg, ver: 1e-6 if ver == 1 else 1e-3)
+    d = save_artifact(tmp_path / "art", bundle, params)
+    snap = json.loads((d / "autotune.json").read_text())
+    assert snap["entries"][key_str]["measured"] is True
+    assert snap["entries"][key_str]["version"] == 1
+
+    # live cache holds an ANALYTIC record -> the measured snapshot wins
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "live.json"))
+    autotune.tune(*shape, dtype="float32", backend="cpu")
+    live = autotune.get_cache().get(key_str)
+    assert live is not None and not live["measured"]
+    assert restore_autotune_snapshot(d) >= 1
+    got = autotune.get_cache().get(key_str)
+    assert got["measured"] and got["version"] == 1
+
+    # live cache holds a MEASURED record -> the snapshot never clobbers it
+    marker = {"block_n": 8, "block_m": 128, "block_c": 8,
+              "version": 2, "measured": True, "source": "wallclock"}
+    autotune.get_cache().put(key_str, dict(marker))
+    restore_autotune_snapshot(d)
+    assert autotune.get_cache().get(key_str) == marker
+
+
 def test_deploy_to_artifact_emits_loadable_artifact(key, tmp_path):
     """convert.deploy_to_artifact: LUT_TRAIN params -> artifact on disk whose
     loaded params equal the returned in-memory deployed tree."""

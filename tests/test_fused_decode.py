@@ -1,0 +1,251 @@
+"""Fused encode→lookup decode kernel (v3, DESIGN.md §13) vs the oracle,
+plus the version-dispatch wiring in repro.kernels.ops.
+
+Acceptance (ISSUE 8): byte-/token-parity with the two-pass path across
+ragged shapes and every scale layout; fused bias/activation epilogue; a
+structural guarantee that the codes live in VMEM scratch and never touch
+HBM; and `ops.lut_amm` routing by the per-shape autotune record.
+"""
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels import autotune, ops
+from repro.kernels.fused_decode import (
+    _fused_decode_call,
+    _fused_decode_kernel,
+    fused_decode_pallas,
+)
+from repro.kernels.lut_amm import lut_amm_pallas
+from repro.kernels.ref import encode_ref, lut_amm_ref
+
+# N/M not multiples of the blocks; C ragged against the v1/v2 block_c axis
+RAGGED = [
+    # (N, D, M, K, V, block_n, block_m)
+    (33, 64, 70, 16, 8, 16, 64),
+    (100, 64, 130, 16, 32, 32, 128),
+    (7, 96, 130, 8, 16, 8, 128),
+    (65, 160, 48, 16, 32, 64, 128),
+    (17, 96, 384, 16, 16, 16, 256),
+]
+
+
+def _mk(n, d, m, k, v, seed=None):
+    k1, k2, k3 = jax.random.split(
+        jax.random.PRNGKey(seed if seed is not None else n * d), 3
+    )
+    x = jax.random.normal(k1, (n, d))
+    P = jax.random.normal(k2, (d // v, k, v))
+    T = jax.random.normal(k3, (d // v, k, m))
+    return x, P, T
+
+
+@pytest.mark.parametrize("shape", RAGGED, ids=[str(s[:5]) for s in RAGGED])
+@pytest.mark.parametrize("layout", ["per_codebook", "per_column", "m_shared"])
+def test_fused_ragged_shapes_all_scale_layouts(shape, layout):
+    """Acceptance sweep: fused matches the fp32 dequantize reference within
+    1e-4 on ragged shapes across every scale layout."""
+    n, d, m, k, v, bn, bm = shape
+    x, P, T = _mk(n, d, m, k, v)
+    kw = {"per_column": layout == "per_column", "m_shared": layout == "m_shared"}
+    qt = quant.quantize_table(T, bits=8, **kw)
+    ref = lut_amm_ref(x, P, qt.q, qt.scale)
+    out = fused_decode_pallas(
+        x, P, qt.q, qt.scale, block_n=bn, block_m=bm, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", RAGGED[:3], ids=[str(s[:5]) for s in RAGGED[:3]])
+def test_fused_byte_parity_with_v2_m_shared(shape):
+    """On the deployed m-shared layout both kernels accumulate raw int32 and
+    dequantize once — the outputs must be BYTE-identical, not merely close."""
+    n, d, m, k, v, bn, bm = shape
+    x, P, T = _mk(n, d, m, k, v, seed=11 + n)
+    qt = quant.quantize_table(T, m_shared=True)
+    v2 = lut_amm_pallas(
+        x, P, qt.q, qt.scale, block_n=bn, block_m=bm, interpret=True
+    )
+    fused = fused_decode_pallas(
+        x, P, qt.q, qt.scale, block_n=bn, block_m=bm, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(v2))
+
+
+def test_fused_encode_agrees_with_encode_ref():
+    """Token parity: the argmin the fused kernel bakes into its one-hot codes
+    is the reference encode — verified end-to-end by contracting against an
+    identity-scale table whose (c, k) slots are distinct powers of 2."""
+    n, d, k, v = 24, 64, 8, 8
+    c = d // v
+    x, P, _ = _mk(n, d, 1, k, v, seed=5)
+    # table_q[c, k, 0] = unique id per (c, k) slot so the contraction output
+    # uniquely determines the chosen code per codebook
+    ids = jnp.arange(c * k, dtype=jnp.int8).reshape(c, k, 1)
+    scale = jnp.ones((1, 1, 1), jnp.float32)
+    out = fused_decode_pallas(x, P, ids, scale, block_n=8, block_m=1,
+                              interpret=True)
+    codes = np.asarray(encode_ref(x, P))                    # (n, c)
+    want = (codes + np.arange(c)[None, :] * k).sum(axis=1)  # sum of slot ids
+    np.testing.assert_array_equal(np.asarray(out[:, 0]), want.astype(np.float32))
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "silu", "gelu", "relu2"])
+def test_fused_bias_activation_epilogue(act):
+    import repro.models.common as common
+
+    n, d, m, k, v = 40, 64, 100, 16, 8
+    x, P, T = _mk(n, d, m, k, v, seed=7)
+    b = jax.random.normal(jax.random.PRNGKey(9), (m,))
+    qt = quant.quantize_table(T, m_shared=True)
+    ref = lut_amm_ref(x, P, qt.q, qt.scale) + b
+    if act != "none":
+        ref = common.activation(act, ref)
+    out = fused_decode_pallas(
+        x, P, qt.q, qt.scale, bias=b, act=act,
+        block_n=16, block_m=64, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_fused_autotuned_default_blocks():
+    """No explicit blocks -> the wrapper takes the fused heuristic tiling
+    and still matches the oracle."""
+    n, d, m, k, v = 50, 96, 75, 16, 16
+    x, P, T = _mk(n, d, m, k, v, seed=3)
+    qt = quant.quantize_table(T)
+    ref = lut_amm_ref(x, P, qt.q, qt.scale)
+    out = fused_decode_pallas(x, P, qt.q, qt.scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_fused_chunked_per_codebook_path():
+    """Tiles big enough that the (chunk, bn, bm) int32 partial bound kicks
+    in: chunk_c = 2^21/(4·32·2048) = 8 < C = 32, so the per-codebook
+    contraction runs 4 chunks — each rescaled in fp32 — and must still
+    match the oracle."""
+    n, d, m, k, v = 32, 256, 2048, 16, 8         # C = 32
+    x, P, T = _mk(n, d, m, k, v, seed=13)
+    qt = quant.quantize_table(T, per_column=True)
+    ref = lut_amm_ref(x, P, qt.q, qt.scale)
+    out = fused_decode_pallas(
+        x, P, qt.q, qt.scale, block_n=32, block_m=2048, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_fused_structure_codes_never_hbm():
+    """Structural acceptance: the codes buffer is VMEM scratch — it has no
+    output ref, the pallas_call has exactly ONE out_shape (the (N, M)
+    result), so codes cannot be materialized to HBM."""
+    src = inspect.getsource(_fused_decode_call)
+    # single output: out_shape is one ShapeDtypeStruct, not a tuple/list
+    assert src.count("out_shape=") == 1
+    assert "out_shape=jax.ShapeDtypeStruct" in src
+    # the code buffer is declared as VMEM scratch, not an operand/output
+    assert "scratch_shapes=[pltpu.VMEM(code_shape, jnp.int8)]" in src
+
+    ksrc = inspect.getsource(_fused_decode_kernel)
+    # encode runs once per N tile, guarded on the first M step
+    assert "pl.when(m_step == 0)" in ksrc
+    # output tile written exactly once — no read-modify-write accumulation
+    assert ksrc.count("o_ref[...] =") == 1
+    assert "o_ref[...] +=" not in ksrc and "= o_ref" not in ksrc
+    # int8 MXU contraction, not an fp32 table materialization
+    assert "t_ref[...].astype" not in ksrc
+    assert "preferred_element_type=jnp.int32" in ksrc
+
+
+# ---------------------------------------------------------------------------
+# ops.lut_amm version dispatch
+# ---------------------------------------------------------------------------
+
+def _spy(monkeypatch, calls):
+    for name, attr in [("fused", "fused_decode_pallas"),
+                       ("v2", "lut_amm_pallas"),
+                       ("v1", "lut_amm_pallas_v1")]:
+        real = getattr(ops, attr)
+
+        def wrap(*a, _real=real, _name=name, **kw):
+            calls.append(_name)
+            return _real(*a, **kw)
+
+        monkeypatch.setattr(ops, attr, wrap)
+
+
+@pytest.mark.parametrize("version,expect", [(1, "v1"), (2, "v2"), (3, "fused")])
+def test_ops_explicit_version_forces_generation(monkeypatch, version, expect):
+    calls = []
+    _spy(monkeypatch, calls)
+    x, P, T = _mk(16, 32, 48, 16, 4, seed=21)
+    qt = quant.quantize_table(T, m_shared=True)
+    ref = lut_amm_ref(x, P, qt.q, qt.scale)
+    out = ops.lut_amm(x, P, qt.q, qt.scale, version=version, interpret=True)
+    assert calls == [expect]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_ops_explicit_blocks_keep_historical_v2(monkeypatch):
+    """Callers that pass block sizes but no version (op_microbench's v2
+    column, older call sites) must keep getting the v2 kernel."""
+    calls = []
+    _spy(monkeypatch, calls)
+    x, P, T = _mk(16, 32, 48, 16, 4, seed=22)
+    qt = quant.quantize_table(T, m_shared=True)
+    ops.lut_amm(x, P, qt.q, qt.scale, block_n=8, block_m=48, interpret=True)
+    assert calls == ["v2"]
+
+
+def test_ops_default_follows_autotune_record(monkeypatch, tmp_path):
+    """With no explicit version/blocks, ops.lut_amm consults the per-shape
+    autotune record: a version=3 record routes to the fused kernel."""
+    calls = []
+    _spy(monkeypatch, calls)
+    n, d, m, k, v = 16, 32, 48, 16, 4
+    c = d // v
+    cache = autotune.get_cache()
+    key = autotune.shape_key("lut_amm", n, m, c, k, v, "float32",
+                             autotune._backend())
+    cache.put(key, {"block_n": 8, "block_m": 48, "block_c": c,
+                    "version": 3, "measured": True, "source": "wallclock"})
+    x, P, T = _mk(n, d, m, k, v, seed=23)
+    qt = quant.quantize_table(T, m_shared=True)
+    out = ops.lut_amm(x, P, qt.q, qt.scale, interpret=True)
+    assert calls == ["fused"]
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(lut_amm_ref(x, P, qt.q, qt.scale)),
+        atol=1e-4,
+    )
+
+
+def test_ops_no_record_small_m_interpret_falls_back_to_v1(monkeypatch):
+    """ISSUE 8 satellite: the v2-slower-than-v1 regression fix — with no
+    record, interpret-mode small-M shapes run v1, not v2."""
+    calls = []
+    _spy(monkeypatch, calls)
+    x, P, T = _mk(16, 32, 48, 16, 4, seed=24)
+    qt = quant.quantize_table(T, m_shared=True)
+    ref = lut_amm_ref(x, P, qt.q, qt.scale)
+    out = ops.lut_amm(x, P, qt.q, qt.scale, interpret=True)
+    assert calls == ["v1"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_ops_v1_with_m_shared_scale_and_bias():
+    """The dispatch shim broadcasts m-shared scales to v1's (C, ...) layout
+    and applies bias/activation outside the kernel — same contract as the
+    fused generations."""
+    import repro.models.common as common
+
+    x, P, T = _mk(16, 32, 48, 16, 4, seed=25)
+    b = jax.random.normal(jax.random.PRNGKey(2), (48,))
+    qt = quant.quantize_table(T, m_shared=True)
+    ref = common.activation("relu", lut_amm_ref(x, P, qt.q, qt.scale) + b)
+    out = ops.lut_amm(x, P, qt.q, qt.scale, bias=b, act="relu",
+                      version=1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
