@@ -30,6 +30,7 @@ MODULES = [
     "quant_ablation",
     "op_microbench",
     "serving_bench",
+    "serving_spec",
     "serving_faults",
     "roofline_table",
 ]
@@ -39,6 +40,7 @@ _ROOT = pathlib.Path(__file__).resolve().parents[1]
 JSON_ARTIFACTS = {
     "op_microbench": _ROOT / "BENCH_kernels.json",
     "serving_bench": _ROOT / "BENCH_serving.json",
+    "serving_spec": _ROOT / "BENCH_spec.json",
     "serving_faults": _ROOT / "BENCH_faults.json",
     "fig13_replaced_layers": _ROOT / "BENCH_plans.json",
 }

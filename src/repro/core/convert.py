@@ -209,15 +209,30 @@ def _build_quantize_tables(P: jax.Array, W: jax.Array, lut) -> tuple[jax.Array, 
     return jax.jit(fn)(P, W)
 
 
-def deploy_lut_train_params(bundle_lut: ModelBundle, lut_params: Any) -> tuple[ModelBundle, Any]:
+def deploy_lut_train_params(
+    bundle_lut: ModelBundle, lut_params: Any, *, plan: Any | None = None
+) -> tuple[ModelBundle, Any]:
     """LUT_TRAIN params -> LUT_INFER params (int8 tables, weights dropped).
 
     Walks the LUT_INFER registry: every replaced site's table is built and
     quantized with that site's own LUTConfig (bits / per-column / m-shared
     layout for int8_dot and the fused kernel), so heterogeneous plans
     deploy each site exactly as its serving path expects.
+
+    `plan` (a LUTPlan) deploys the SAME training state under a different
+    replacement plan (DESIGN.md §14.1). This works because LUT_TRAIN
+    params keep the frozen dense `w` at every replaced site: a plan whose
+    LUT sites are a subset of the trained plan's resolves each site either
+    from its centroids+w (LUT — tables byte-identical to the trained
+    plan's deploy) or from the frozen `w` directly (kept dense — exact).
+    A plan that replaces a site the trained plan left dense has no
+    centroids to build from and fails loudly. LM segment boundaries move
+    with the plan, so leaves are re-grouped through global layer indices.
     """
-    bundle_inf = build_model(bundle_lut.arch, Mode.LUT_INFER)
+    arch = bundle_lut.arch
+    if plan is not None:
+        arch = dataclasses.replace(arch, lut_plan=plan)
+    bundle_inf = build_model(arch, Mode.LUT_INFER)
     inf_specs = jax.eval_shape(bundle_inf.init, jax.random.PRNGKey(0))
     iflat = _flat_paths(inf_specs)
     tflat = _flat_paths(lut_params)
@@ -226,12 +241,57 @@ def deploy_lut_train_params(bundle_lut: ModelBundle, lut_params: Any) -> tuple[M
     for s in bundle_inf.sites():
         site_by_path.setdefault(s.path, s)      # dedupe layer-stacked entries
 
+    # LM segment realignment: train and inf group the same global layers
+    # into different scan runs when their plans differ, so "segments/i/..."
+    # paths and stack counts disagree. Resolve through global layer
+    # indices: slice the train leaf's stacked axis per layer, re-stack per
+    # the inf bundle's own segments. (graft_dense_to_lut's offset trick,
+    # generalized to arbitrary source segmentation.)
+    train_offsets: list[int] = []
+    if isinstance(lut_params, dict) and "segments" in lut_params:
+        off = 0
+        for seg in lut_params["segments"]:
+            train_offsets.append(off)
+            off += jax.tree.leaves(seg)[0].shape[0]
+    inf_runs: list[tuple[int, int]] = []        # (global layer offset, count)
+    if bundle_inf.kind == "lm":
+        off = 0
+        for count, _ in bundle_inf.cfg.segments:
+            inf_runs.append((off, count))
+            off += count
+
+    def train_leaf(path: str):
+        """Train-tree source for an inf-tree path; None when absent.
+        Segment-qualified LM paths gather per-layer slices so any
+        train/inf segmentation pair lines up."""
+        parts = path.split("/")
+        if parts[0] == "segments" and train_offsets:
+            lo, count = inf_runs[int(parts[1])]
+            rest = "/".join(parts[2:])
+            rows = []
+            for g in range(lo, lo + count):
+                si = max(i for i, o in enumerate(train_offsets) if o <= g)
+                src = tflat.get(f"segments/{si}/{rest}")
+                if src is None:
+                    return None
+                rows.append(src[g - train_offsets[si]])
+            return jnp.stack(rows)
+        return tflat.get(path)
+
     out: dict[str, jax.Array] = {}
     for path, spec in iflat.items():
-        if path in tflat and tflat[path].shape == spec.shape:
-            out[path] = tflat[path]
+        src = train_leaf(path)
+        if src is not None and src.shape == spec.shape:
+            out[path] = src
             continue
         if not (path.endswith("/table_q") or path.endswith("/table_scale")):
+            if path.endswith("/centroids"):
+                raise ValueError(
+                    f"{path.rsplit('/', 1)[0]}: the deploy plan replaces this "
+                    f"site but the trained checkpoint carries no centroids for "
+                    f"it — a deploy plan may only replace sites the TRAINED "
+                    f"plan replaced (derive sub-plans with LUTPlan.keeping_dense)"
+                )
             raise KeyError(f"no source for deployed param {path}")
         base = path.rsplit("/", 1)[0]
         if f"{base}/table_q" in out:
@@ -239,14 +299,21 @@ def deploy_lut_train_params(bundle_lut: ModelBundle, lut_params: Any) -> tuple[M
         site = site_by_path.get(base)
         if site is None or site.mode != Mode.LUT_INFER or site.lut is None:
             raise KeyError(f"deployed table at {base} has no registered LUT site")
-        q, scale = _build_quantize_tables(
-            tflat[f"{base}/centroids"], tflat[f"{base}/w"], site.lut
-        )
+        P, W = train_leaf(f"{base}/centroids"), train_leaf(f"{base}/w")
+        if P is None or W is None:
+            raise ValueError(
+                f"{base}: the deploy plan replaces this site but the trained "
+                f"checkpoint carries no centroids for it — a deploy plan may "
+                f"only replace sites the TRAINED plan replaced (derive "
+                f"sub-plans with LUTPlan.keeping_dense)"
+            )
+        q, scale = _build_quantize_tables(P, W, site.lut)
         for leaf_path, leaf in ((f"{base}/table_q", q), (f"{base}/table_scale", scale)):
             if leaf.shape != iflat[leaf_path].shape:
                 raise ValueError(
                     f"{leaf_path}: deployed shape {leaf.shape} != model spec "
-                    f"{iflat[leaf_path].shape}"
+                    f"{iflat[leaf_path].shape} — the deploy plan's K/V/bits "
+                    f"must match what the site was trained with"
                 )
             out[leaf_path] = leaf
     leaves = [out[p] for p in iflat]
@@ -257,6 +324,8 @@ def deploy_lut_train_params(bundle_lut: ModelBundle, lut_params: Any) -> tuple[M
 def deploy_to_artifact(
     bundle_lut: ModelBundle, lut_params: Any, directory: str | Any,
     *, recipe: dict[str, Any] | None = None,
+    target_plan: Any | None = None,
+    extra_plans: dict[str, Any] | None = None,
 ) -> tuple[ModelBundle, Any]:
     """Deploy LUT_TRAIN params and write the serving tree as a LUTArtifact.
 
@@ -265,9 +334,23 @@ def deploy_to_artifact(
     `repro.serving.artifact.load_artifact`) reconstructs both. `recipe`
     (a `Recipe.to_dict` payload) is recorded in the manifest for training
     provenance (DESIGN.md §10.2).
+
+    `target_plan` deploys the artifact's main plan under an override (a
+    sub-plan of the trained plan, e.g. trained.keeping_dense("attn/*"));
+    `extra_plans` maps extra plan names to LUTPlans deployed from the same
+    training state into the same artifact — the multi-plan manifest that
+    spec-decode serving loads a "draft" from (DESIGN.md §14.1). Shared
+    leaves are deduplicated on disk by save_artifact.
     """
     from repro.serving.artifact import save_artifact
 
-    bundle_inf, inf_params = deploy_lut_train_params(bundle_lut, lut_params)
-    save_artifact(directory, bundle_inf, inf_params, recipe=recipe)
+    bundle_inf, inf_params = deploy_lut_train_params(
+        bundle_lut, lut_params, plan=target_plan
+    )
+    extras = {
+        name: deploy_lut_train_params(bundle_lut, lut_params, plan=p)
+        for name, p in (extra_plans or {}).items()
+    }
+    save_artifact(directory, bundle_inf, inf_params, recipe=recipe,
+                  extra_plans=extras or None)
     return bundle_inf, inf_params

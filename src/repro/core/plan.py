@@ -248,6 +248,22 @@ class LUTPlan:
             r.select.validate(n_layers)
         return self
 
+    def keeping_dense(self, *kinds: str) -> "LUTPlan":
+        """This plan plus a final keep-dense rule over `kinds` (fnmatch
+        patterns) — the mechanical way to derive a higher-fidelity SUB-plan
+        from a trained plan. Every site the result replaces, self also
+        replaces, so both deploy from one LUT_TRAIN checkpoint and share
+        their tables byte-for-byte (the spec-decode target/draft pairing,
+        DESIGN.md §14.1)."""
+        if not kinds:
+            raise ValueError("keeping_dense needs at least one kind pattern")
+        return dataclasses.replace(
+            self,
+            rules=self.rules + (PlanRule(
+                select=SiteSelector(kinds=tuple(kinds)), replace=False,
+            ),),
+        )
+
     def describe(self) -> str:
         """One-line human summary (launch logs / benchmark rows)."""
         if not self.rules:

@@ -77,6 +77,19 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--kv-dtype", choices=sorted(KV_DTYPES), default=None,
                     help="KV-cache storage dtype (default: compute dtype); "
                          "fp8 halves cache HBM, K/V are upcast at use")
+    # speculative decoding (DESIGN.md §14)
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="draft/verify speculative decoding: γ cheap draft "
+                         "forwards per round, one batched target verify; "
+                         "tokens are byte-identical to plain decode")
+    ap.add_argument("--draft-plan", default="draft",
+                    help="plan name to load the draft model from a multi-"
+                         "plan artifact (see describe_artifact); 'target' "
+                         "= explicit self-draft; random-init mode always "
+                         "self-drafts")
+    ap.add_argument("--spec-gamma", type=int, default=4,
+                    help="speculation depth: draft tokens proposed per "
+                         "verify forward (the verify shape is (slots, γ+1))")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature; 0 = greedy")
     ap.add_argument("--top-k", type=int, default=0, help="top-k filter; 0 disables")
@@ -125,6 +138,9 @@ def main(argv: list[str] | None = None) -> None:
                  "not wired)")
     if args.supervise and args.tp > 1:
         ap.error("--supervise does not support --tp > 1 yet")
+    if args.spec_decode and args.tp > 1:
+        ap.error("--spec-decode does not compose with --tp > 1 (the draft "
+                 "caches are host-managed)")
 
     if args.port is not None:
         return _serve_http(args)
@@ -158,6 +174,7 @@ def main(argv: list[str] | None = None) -> None:
         bundle, params, n_slots=args.slots, max_seq=args.max_seq,
         prefill_chunk=args.prefill_chunk, compute_dtype=compute_dtype,
         mesh=mesh, **_paged_kwargs(args),
+        **_resolve_draft(_spec_kwargs(args), args.artifact),
     )
 
     if not args.no_warmup:
@@ -204,6 +221,12 @@ def main(argv: list[str] | None = None) -> None:
               f"lookups ({hits:.2f}/req), {st['prefill_tokens_skipped']} "
               f"prefill tok skipped  cow={st['cow_copies']}  "
               f"shed={st['shed']}")
+    if eng.spec is not None:
+        print(f"  spec: γ={st['spec_gamma']} acceptance="
+              f"{st['spec_acceptance_rate']:.2f} "
+              f"target_forwards_per_token={st['target_forwards_per_token']:.2f} "
+              f"({st['spec_rounds']} rounds, {st['spec_draft_forwards']} draft "
+              f"fwd, {st['spec_bonus_tokens']} bonus)")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
 
@@ -218,6 +241,30 @@ def _paged_kwargs(args) -> dict:
     if args.kv_dtype is not None:
         kw["kv_dtype"] = args.kv_dtype
     return kw
+
+
+def _spec_kwargs(args) -> dict:
+    """Speculative-decoding kwargs, JSON-safe like _paged_kwargs: the
+    supervisor ships these to the worker, which resolves `draft_plan`
+    against the artifact on its side of the pipe."""
+    kw: dict = {}
+    if args.spec_decode:
+        kw.update(spec_decode=True, spec_gamma=args.spec_gamma,
+                  draft_plan=args.draft_plan)
+    return kw
+
+
+def _resolve_draft(engine_kwargs: dict, artifact: str | None) -> dict:
+    """In-process half of the draft_plan handshake: swap the JSON-safe
+    plan NAME for loaded draft_bundle/draft_params. Without an artifact
+    (random-init smoke) the engine self-drafts."""
+    plan = engine_kwargs.pop("draft_plan", None)
+    if engine_kwargs.get("spec_decode") and plan is not None and artifact:
+        from repro.serving.artifact import load_artifact
+
+        art = load_artifact(artifact, plan=plan, restore_autotune=False)
+        engine_kwargs.update(draft_bundle=art.bundle, draft_params=art.params)
+    return engine_kwargs
 
 
 def _reduced_arch(args):
@@ -241,7 +288,7 @@ def _serve_http(args) -> None:
     engine_kwargs = dict(
         n_slots=args.slots, max_seq=args.max_seq,
         prefill_chunk=args.prefill_chunk, max_queue=args.max_queue,
-        **_paged_kwargs(args),
+        **_paged_kwargs(args), **_spec_kwargs(args),
     )
     if args.supervise:
         from repro.serving.supervisor import EngineSupervisor
@@ -274,7 +321,7 @@ def _serve_http(args) -> None:
             mesh = make_host_mesh(data=1, model=args.tp)
         eng = ServingEngine(
             bundle, params, compute_dtype=compute_dtype, mesh=mesh,
-            **engine_kwargs,
+            **_resolve_draft(engine_kwargs, args.artifact),
         )
         if not args.no_warmup:
             eng.warmup()          # compile both engine shapes before /readyz

@@ -68,6 +68,12 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--eval-max-regression", type=float, default=None,
                     help="fail the run if the deployed loss regresses more "
                          "than this past the dense teacher's")
+    ap.add_argument("--spec-draft", default=None, metavar="KINDS",
+                    help="deploy a TWO-plan artifact for speculative "
+                         "serving: the trained plan ships as the 'draft' "
+                         "and the target keeps these comma-separated kind "
+                         "patterns dense (e.g. 'attn/*'); serve with "
+                         "launch/serve.py --spec-decode (DESIGN.md §14)")
     args = ap.parse_args(argv)
 
     artifact_dir = args.artifact_dir or args.ckpt_dir + "_artifact"
@@ -75,9 +81,10 @@ def main(argv: list[str] | None = None) -> None:
         ap.error("--dump-recipe writes the flag-built default recipe; "
                  "combining it with --recipe is a no-op copy — drop one")
     if not args.lut and args.recipe is None and (
-            args.distill_weight > 0.0 or args.eval_max_regression is not None):
-        ap.error("--distill-weight/--eval-max-regression configure the LUT "
-                 "pipeline stages — they require --lut")
+            args.distill_weight > 0.0 or args.eval_max_regression is not None
+            or args.spec_draft is not None):
+        ap.error("--distill-weight/--eval-max-regression/--spec-draft "
+                 "configure the LUT pipeline stages — they require --lut")
     if args.recipe is not None:
         recipe = Recipe.load(args.recipe)
     else:
@@ -86,6 +93,7 @@ def main(argv: list[str] | None = None) -> None:
             distill_weight=args.distill_weight, distill_tau=args.distill_tau,
             grad_compression=args.grad_compression,
             eval_max_regression=args.eval_max_regression,
+            spec_draft=args.spec_draft,
         )
     if args.dump_recipe is not None:
         recipe.save(args.dump_recipe)

@@ -44,8 +44,17 @@ FORMAT = "lut-artifact"
 # written before plans existed, migrate on load: their arch dict carries
 # the legacy lut_policy string, which the back-compat shim resolves to the
 # same plan the writer used.
-VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+# v3 (DESIGN.md §14): one artifact can carry MULTIPLE resolved plans over a
+# shared array payload — manifest["plans"] maps extra plan names (e.g.
+# "draft") to {plan, leaves}, where each leaf record's "key" points either
+# at a target leaf (byte-identical, deduplicated) or at a private
+# "plan.<name>/<path>" entry in arrays.npz. A v2 artifact migrates on load
+# as carrying exactly the implicit plan {"target"}.
+VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
+
+#: the reserved name of the main plan every artifact carries
+TARGET_PLAN = "target"
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
@@ -65,16 +74,28 @@ class LUTArtifact:
     params: Any
     manifest: dict[str, Any]
     path: pathlib.Path
+    plan_name: str = TARGET_PLAN
 
     @property
     def arch_name(self) -> str:
         return self.manifest["arch"]["name"]
 
     @property
+    def plan_names(self) -> list[str]:
+        """Every plan this artifact can resolve, target first."""
+        return [TARGET_PLAN] + sorted(self.manifest.get("plans", {}))
+
+    @property
     def recipe(self) -> dict[str, Any] | None:
         """The executed training recipe (`Recipe.to_dict` payload), when
         the artifact was deployed through `Recipe.run` (DESIGN.md §10.2)."""
         return self.manifest.get("recipe")
+
+
+def _arch_sans_plan(arch) -> dict[str, Any]:
+    d = arch_to_dict(arch)
+    d.pop("lut_plan", None)
+    return d
 
 
 def save_artifact(
@@ -84,6 +105,7 @@ def save_artifact(
     *,
     autotune_snapshot: bool = True,
     recipe: dict[str, Any] | None = None,
+    extra_plans: dict[str, tuple[ModelBundle, Any]] | None = None,
 ) -> pathlib.Path:
     """Write `(bundle, params)` as a LUTArtifact directory (atomic).
 
@@ -93,6 +115,15 @@ def save_artifact(
     `repro.train.recipe.Recipe.to_dict` payload) records the executed
     training pipeline in the manifest — provenance only, never consulted
     at load; `Recipe.from_dict(manifest["recipe"])` round-trips it.
+
+    `extra_plans` maps additional plan names (e.g. "draft") to
+    `(bundle, params)` pairs deployed from the SAME training state under a
+    different LUTPlan (convert.deploy_lut_train_params(plan=...)). Each
+    extra bundle must share the target's arch modulo `lut_plan`. Leaves
+    byte-identical to a target leaf at the same path are deduplicated —
+    the manifest records a `key` pointing at the shared array — so a
+    draft plan whose tables the target also carries costs ~zero extra
+    bytes on disk (DESIGN.md §14.1).
     """
     final = pathlib.Path(directory)
     tmp = final.parent / (final.name + ".tmp")
@@ -102,10 +133,42 @@ def save_artifact(
 
     host = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), params)
     flat = flatten_tree(host)
-    np.savez(tmp / _ARRAYS, **{
+    arrays = {
         k: (v.view(np.uint16) if v.dtype == _BF16 else v)
         for k, v in flat.items()
-    })
+    }
+
+    plans: dict[str, Any] = {}
+    for name, (pbundle, pparams) in (extra_plans or {}).items():
+        if name == TARGET_PLAN:
+            raise ValueError(f"plan name {TARGET_PLAN!r} is reserved for the "
+                             f"artifact's main (bundle, params)")
+        if (pbundle.mode != bundle.mode or pbundle.kind != bundle.kind
+                or _arch_sans_plan(pbundle.arch) != _arch_sans_plan(bundle.arch)):
+            raise ValueError(
+                f"extra plan {name!r}: its bundle must share the target's "
+                f"arch/mode/kind modulo lut_plan"
+            )
+        phost = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), pparams)
+        pflat = flatten_tree(phost)
+        leaves = {}
+        for path, v in pflat.items():
+            shared = flat.get(path)
+            if (shared is not None and shared.shape == v.shape
+                    and shared.dtype == v.dtype
+                    and shared.tobytes() == v.tobytes()):
+                key = path                       # dedupe: reuse the target leaf
+            else:
+                key = f"plan.{name}/{path}"
+                arrays[key] = v.view(np.uint16) if v.dtype == _BF16 else v
+            leaves[path] = {"shape": list(v.shape), "dtype": str(v.dtype),
+                            "key": key}
+        plans[name] = {
+            "plan": effective_plan(pbundle.arch).to_dict(),
+            "leaves": leaves,
+        }
+
+    np.savez(tmp / _ARRAYS, **arrays)
 
     manifest = {
         "format": FORMAT,
@@ -120,12 +183,16 @@ def save_artifact(
             for k, v in flat.items()
         },
     }
+    if plans:
+        manifest["plans"] = plans
     if recipe is not None:
         manifest["recipe"] = recipe
     (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=2))
 
     if autotune_snapshot:
-        entries = _snapshot_entries(bundle)
+        entries = _snapshot_entries(
+            [bundle] + [b for b, _ in (extra_plans or {}).values()]
+        )
         (tmp / _AUTOTUNE).write_text(
             json.dumps({"version": 1, "entries": entries}, indent=1, sort_keys=True)
         )
@@ -147,8 +214,10 @@ def save_artifact(
     return final
 
 
-def _snapshot_entries(bundle: ModelBundle) -> dict[str, Any]:
-    """Autotune cache entries belonging to THIS bundle's LUT kernel sites.
+def _snapshot_entries(bundles: list[ModelBundle]) -> dict[str, Any]:
+    """Autotune cache entries belonging to these bundles' LUT kernel sites
+    (the target plus any extra plans' bundles — a draft plan can replace
+    sites the target keeps dense, so its signatures must ship too).
 
     The process cache may hold winners for other archs/backends; shipping
     those would make every server that loads the artifact inherit them
@@ -157,13 +226,14 @@ def _snapshot_entries(bundle: ModelBundle) -> dict[str, Any]:
     slot counts and hardware are unknown at deploy time.
     """
     sites = set()
-    for site in bundle.sites():                          # registry walk (§9.2)
-        if site.mode != Mode.LUT_INFER or site.lut is None or not site.lut.use_kernel:
-            continue
-        lut = site.lut
-        c = site.d_in // lut.v
-        sites.add(("lut_amm", site.d_out, c, lut.k, lut.v))
-        sites.add(("encode", 0, c, lut.k, lut.v))        # shared-encode path
+    for bundle in bundles:
+        for site in bundle.sites():                      # registry walk (§9.2)
+            if site.mode != Mode.LUT_INFER or site.lut is None or not site.lut.use_kernel:
+                continue
+            lut = site.lut
+            c = site.d_in // lut.v
+            sites.add(("lut_amm", site.d_out, c, lut.k, lut.v))
+            sites.add(("encode", 0, c, lut.k, lut.v))    # shared-encode path
     if not sites:
         return {}
 
@@ -210,7 +280,8 @@ def _resolve_artifact_dir(directory: str | os.PathLike) -> pathlib.Path:
 
 
 def load_artifact(
-    directory: str | os.PathLike, *, restore_autotune: bool = True
+    directory: str | os.PathLike, *, plan: str = TARGET_PLAN,
+    restore_autotune: bool = True
 ) -> LUTArtifact:
     """Rebuild the model and params from a saved artifact.
 
@@ -219,32 +290,63 @@ def load_artifact(
     init, and every leaf is validated (path, shape, dtype) against both the
     manifest and the live model before device_put. A repo drift that changes
     the param tree therefore fails loudly at load, not as NaNs at serve.
+
+    `plan` selects which resolved plan of a multi-plan (v3) artifact to
+    load: "target" (the default, and the only plan v1/v2 artifacts carry)
+    or a name from `manifest["plans"]` (e.g. "draft"). A named plan shares
+    the target's arch modulo `lut_plan` and reads its leaves from the
+    shared array payload via the manifest's key indirection.
     """
     primary = pathlib.Path(directory)
     resolved = _resolve_artifact_dir(primary)
     try:
-        return _load_resolved(resolved, restore_autotune=restore_autotune)
+        return _load_resolved(resolved, plan=plan,
+                              restore_autotune=restore_autotune)
     except FileNotFoundError:
         if resolved == primary:
             raise
         # live-deployer race: .old vanished because the re-deploy committed
         # while we were reading it — the new artifact is at <dir> now
-        return _load_resolved(primary, restore_autotune=restore_autotune)
+        return _load_resolved(primary, plan=plan,
+                              restore_autotune=restore_autotune)
 
 
-def _load_resolved(directory: pathlib.Path, *, restore_autotune: bool) -> LUTArtifact:
-    manifest = _read_manifest(directory)
+def _plan_arch(manifest: dict[str, Any], directory, plan: str):
+    """(arch, leaf records, npz-key map) for the requested plan."""
+    import dataclasses as _dc
 
     arch = arch_from_dict(manifest["arch"])
-    if manifest["version"] >= 2:
+    if plan == TARGET_PLAN:
+        recorded = manifest["leaves"]
+        return arch, recorded, {p: p for p in recorded}
+    plans = manifest.get("plans", {})
+    if plan not in plans:
+        have = [TARGET_PLAN] + sorted(plans)
+        raise ValueError(
+            f"{directory}: no plan {plan!r} in this artifact — available: "
+            f"{have}" + ("" if plans else
+                         " (v%d artifact: single-plan)" % manifest["version"])
+        )
+    entry = plans[plan]
+    arch = _dc.replace(arch, lut_plan=LUTPlan.from_dict(entry["plan"]))
+    recorded = entry["leaves"]
+    return arch, recorded, {p: rec["key"] for p, rec in recorded.items()}
+
+
+def _load_resolved(directory: pathlib.Path, *, plan: str,
+                   restore_autotune: bool) -> LUTArtifact:
+    manifest = _read_manifest(directory)
+
+    arch, recorded, keymap = _plan_arch(manifest, directory, plan)
+    if manifest["version"] >= 2 and plan == TARGET_PLAN:
         # the recorded plan must equal what the arch dict resolves to — a
         # hand-edited manifest whose plan and arch disagree would otherwise
         # rebuild a model that silently mismatches the stored tables
-        recorded = LUTPlan.from_dict(manifest["plan"])
-        if recorded != effective_plan(arch):
+        rec_plan = LUTPlan.from_dict(manifest["plan"])
+        if rec_plan != effective_plan(arch):
             raise ValueError(
                 f"{directory}: manifest plan does not match the arch's "
-                f"resolved plan — {recorded.describe()} vs "
+                f"resolved plan — {rec_plan.describe()} vs "
                 f"{effective_plan(arch).describe()}"
             )
     bundle = build_model(arch, Mode(manifest["mode"]))
@@ -257,17 +359,22 @@ def _load_resolved(directory: pathlib.Path, *, restore_autotune: bool) -> LUTArt
     paths = tree_paths(specs)
     spec_leaves = jax.tree_util.tree_leaves(specs)
 
-    recorded = manifest["leaves"]
     leaves = []
     with np.load(directory / _ARRAYS) as data:
-        missing = [p for p in paths if p not in recorded or p not in data.files]
-        extra = sorted(set(data.files) - set(paths))
+        missing = [p for p in paths
+                   if p not in recorded or keymap[p] not in data.files]
+        if plan == TARGET_PLAN:
+            # extra-plan private leaves legitimately live under "plan.<name>/"
+            extra = sorted(k for k in set(data.files) - set(paths)
+                           if not k.startswith("plan."))
+        else:
+            extra = []
         if missing or extra:
             raise ValueError(
                 f"artifact/model tree mismatch: missing={missing[:4]} extra={extra[:4]}"
             )
         for p, spec in zip(paths, spec_leaves):
-            a = data[p]
+            a = data[keymap[p]]
             rec = recorded[p]
             if rec["dtype"] == "bfloat16" and a.dtype == np.uint16:
                 a = a.view(_BF16)                    # undo the npz bf16 detour
@@ -289,7 +396,7 @@ def _load_resolved(directory: pathlib.Path, *, restore_autotune: bool) -> LUTArt
     if restore_autotune:
         restore_autotune_snapshot(directory)
     return LUTArtifact(bundle=bundle, params=params, manifest=manifest,
-                       path=directory)
+                       path=directory, plan_name=plan)
 
 
 def restore_autotune_snapshot(directory: str | os.PathLike) -> int:
@@ -326,19 +433,42 @@ def restore_autotune_snapshot(directory: str | os.PathLike) -> int:
     return merged
 
 
+def _plan_cost(arch, mode: str) -> tuple[int, int, float]:
+    """(n_lut_sites, n_sites, est. per-token linear-site FLOPs) for one
+    resolved plan. LUT sites cost the encode matmul (2·d_in·K per codebook
+    group = 2·d_in·K) plus the table accumulate (2·C·d_out); dense sites the
+    full GEMM (2·d_in·d_out). Config walk only — no params are built."""
+    bundle = build_model(arch, Mode(mode))
+    n_lut = n_sites = 0
+    flops = 0.0
+    for s in bundle.sites():
+        n_sites += 1
+        if s.mode != Mode.DENSE and s.lut is not None:
+            n_lut += 1
+            c = s.d_in // s.lut.v
+            flops += 2.0 * s.d_in * s.lut.k + 2.0 * c * s.d_out
+        else:
+            flops += 2.0 * s.d_in * s.d_out
+    return n_lut, n_sites, flops
+
+
 def describe_artifact(directory: str | os.PathLike) -> str:
     """Human-readable artifact summary (the `python -m repro.serving.artifact
-    <dir>` inspector): arch, plan, recipe provenance, leaf accounting."""
+    <dir>` inspector): arch, every resolved plan with its site counts and
+    estimated FLOP ratio vs the target, recipe provenance, leaf accounting."""
+    import dataclasses as _dc
+
     directory = _resolve_artifact_dir(directory)
     manifest = _read_manifest(directory)
     arch = arch_from_dict(manifest["arch"])
     leaves = manifest["leaves"]
-    n_bytes = sum(
-        int(np.prod(rec["shape"] or [1])) * np.dtype(
+
+    def rec_bytes(rec) -> int:
+        return int(np.prod(rec["shape"] or [1])) * np.dtype(
             np.uint16 if rec["dtype"] == "bfloat16" else rec["dtype"]
         ).itemsize
-        for rec in leaves.values()
-    )
+
+    n_bytes = sum(rec_bytes(rec) for rec in leaves.values())
     lines = [
         f"LUTArtifact at {directory}",
         f"  format    : {manifest['format']} v{manifest['version']}",
@@ -352,6 +482,34 @@ def describe_artifact(directory: str | os.PathLike) -> str:
     int8 = sum(1 for r in leaves.values() if r["dtype"] == "int8")
     if int8:
         lines.append(f"  int8 LUTs : {int8} table leaves")
+
+    # per-plan accounting (v3): site counts + estimated FLOP ratio vs the
+    # target, so an operator can sanity-check a spec-decode deployment
+    # (draft well under 1.0x) before serving it
+    plans = manifest.get("plans", {})
+    if manifest["version"] >= 2:
+        t_lut, t_sites, t_flops = _plan_cost(arch, manifest["mode"])
+        lines.append(f"  plans     : {len(plans) + 1} "
+                     f"({', '.join([TARGET_PLAN] + sorted(plans))})")
+        lines.append(f"    {TARGET_PLAN:<8}: {t_lut}/{t_sites} sites LUT, "
+                     f"1.00x FLOPs (reference)")
+        for name in sorted(plans):
+            entry = plans[name]
+            parch = _dc.replace(arch, lut_plan=LUTPlan.from_dict(entry["plan"]))
+            p_lut, p_sites, p_flops = _plan_cost(parch, manifest["mode"])
+            shared = sum(1 for rec in entry["leaves"].values()
+                         if not rec["key"].startswith("plan."))
+            priv_bytes = sum(rec_bytes(rec) for rec in entry["leaves"].values()
+                             if rec["key"].startswith("plan."))
+            lines.append(
+                f"    {name:<8}: {p_lut}/{p_sites} sites LUT, "
+                f"{p_flops / t_flops:.2f}x FLOPs vs {TARGET_PLAN}, "
+                f"{shared}/{len(entry['leaves'])} leaves shared "
+                f"(+{priv_bytes/1e6:.2f} MB private)"
+            )
+            lines.append(f"      plan    : "
+                         f"{LUTPlan.from_dict(entry['plan']).describe()}")
+
     recipe = manifest.get("recipe")
     if recipe is not None:
         stages = " -> ".join(s.get("name", s.get("stage", "?"))

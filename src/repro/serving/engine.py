@@ -48,6 +48,15 @@ sequential, so mamba-family bundles need chunk-aligned prompts.
   copy-on-write. Prompt prefixes already resident skip their prefill
   chunks entirely; pool exhaustion preempts by shedding (status "shed"),
   never by raising. Token output is byte-identical to the dense engine.
+* **Speculative decoding** (DESIGN.md §14) — with `spec_decode=True` the
+  width-1 decode step becomes a draft/verify round (`serving/spec_decode`):
+  γ cheap draft forwards through a shared-table draft plan, then ONE target
+  verify over the fixed `(n_slots, γ+1)` shape, emitting up to γ+1 tokens
+  per target forward. Output is byte-identical to non-speculative decode in
+  both greedy and sampled modes; rejected positions roll back by cache_len
+  bookkeeping (dense) plus page rewind (paged). Bundles with per-slot
+  recurrent state auto-disable with a warning, the same seam as prefix
+  sharing above.
 * **Mesh-sharded construction** (DESIGN.md §6.4) — pass `mesh=` (and
   optionally `rules=`) and the engine becomes tensor-parallel: params are
   device_put under `distributed.sharding`'s specs (`table_q` column-sharded
@@ -62,6 +71,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Any, Iterator
 
@@ -75,6 +85,7 @@ from repro.configs import ModelBundle
 from repro.models.attention import PagedSpec
 from repro.serving.kv_pool import KVPagePool
 from repro.serving.sampling import GREEDY, SamplingParams, batch_arrays, sample_tokens
+from repro.serving.spec_decode import SpecDecoder
 
 # KV-cache storage dtypes accepted by name (process-boundary friendly:
 # the supervisor ships engine kwargs as JSON). Sub-bf16 entries store K/V
@@ -203,6 +214,7 @@ class Request:
     submit_t: float = 0.0    # time.monotonic() at submit
     finish_t: float = 0.0    # time.monotonic() at terminal transition
     cancel_requested: bool = False
+    spec_decode: bool | None = None   # per-request override; None = engine default
 
     @property
     def prefill_done(self) -> bool:
@@ -240,6 +252,10 @@ class ServingEngine:
         n_pages: int | None = None,
         prefix_sharing: bool = True,
         kv_dtype: Any | None = None,
+        spec_decode: bool = False,
+        draft_bundle: ModelBundle | None = None,
+        draft_params: Any | None = None,
+        spec_gamma: int = 4,
     ):
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue={max_queue} must be >= 1 (or None)")
@@ -261,15 +277,51 @@ class ServingEngine:
             rules = ShardingRules(mesh)
         self.mesh = mesh
         self.rules = rules
+        # speculative decoding (DESIGN.md §14): resolved BEFORE the autotune
+        # warm-up so the (n_slots, γ+1) verify shape is part of the warmed
+        # token counts, and before the paged block so prefix sharing can be
+        # forced off (a prefix-skipped chunk would strand the draft's dense
+        # cache, which must see every prompt token).
+        self.spec: SpecDecoder | None = None
+        if (draft_bundle is None) != (draft_params is None):
+            raise ValueError("draft_bundle and draft_params come together")
+        if spec_decode:
+            if mesh is not None:
+                raise ValueError(
+                    "spec_decode does not compose with mesh-sharded "
+                    "construction yet — the draft caches are host-managed")
+            # rollback is cache_len bookkeeping (+ page rewind), which only
+            # works for position-indexed caches: probe exactly like the
+            # prefix-sharing seam — every leaf poolable <=> pure attention KV
+            probe = jax.tree_util.tree_flatten_with_path(
+                bundle.init_caches(n_slots, max_seq, abstract=True,
+                                   paged=PagedSpec(n_pages=2, page_size=16))
+            )[0]
+            if not all(_is_pool_leaf(p) for p, _ in probe):
+                warnings.warn(
+                    "spec_decode disabled: bundle carries per-slot recurrent "
+                    "state (mamba conv/ssm, encdec cross-KV) that cannot roll "
+                    "back rejected tokens by cache_len bookkeeping; serving "
+                    "continues non-speculatively")
+                spec_decode = False
+            else:
+                prefix_sharing = False
         # the engine only ever issues two token shapes — (n_slots, 1) decode
-        # and (n_slots, prefill_chunk) chunked prefill — so the LUT warm-up
-        # is exactly those two N values, no ladder needed (DESIGN.md §3.3).
+        # and (n_slots, prefill_chunk) chunked prefill — plus, under spec
+        # decoding, the fixed (n_slots, γ+1) verify — so the LUT warm-up is
+        # exactly those N values, no ladder needed (DESIGN.md §3.3).
         if autotune_lut:
+            counts = [n_slots, n_slots * prefill_chunk]
+            if spec_decode:
+                counts.append(n_slots * (spec_gamma + 1))
             self.n_lut_shapes_tuned = warm_lut_autotune(
-                bundle,
-                [n_slots, n_slots * prefill_chunk],
-                dtype=jnp.dtype(compute_dtype).name,
+                bundle, counts, dtype=jnp.dtype(compute_dtype).name,
             )
+            if spec_decode and draft_bundle is not None:
+                self.n_lut_shapes_tuned += warm_lut_autotune(
+                    draft_bundle, [n_slots, n_slots * prefill_chunk],
+                    dtype=jnp.dtype(compute_dtype).name,
+                )
         else:
             self.n_lut_shapes_tuned = 0
 
@@ -392,6 +444,19 @@ class ServingEngine:
         else:
             self._step_fn = jax.jit(step_fn)
 
+        if spec_decode:
+            # self-draft (no draft bundle) is valid: acceptance ~1.0, used
+            # by warmup smoke paths; a real deployment loads a cheaper plan
+            # from the same multi-plan artifact (load_artifact(plan=...))
+            self.spec = SpecDecoder(
+                self,
+                bundle if draft_bundle is None else draft_bundle,
+                params if draft_params is None else draft_params,
+                gamma=spec_gamma,
+                compute_dtype=compute_dtype,
+                kv_dtype=self.kv_dtype,
+            )
+
     # ------------------------------------------------------------------
     def reset_stats(self) -> None:
         self._counters = {
@@ -412,9 +477,11 @@ class ServingEngine:
             # prompt tokens satisfied from the prefix cache (never forwarded)
             "prefill_tokens_skipped": 0,
         }
-        self._shapes_seen: set[tuple[int, int]] = set()
+        self._shapes_seen: set[tuple[Any, ...]] = set()
         if self.paged:
             self.pool.reset_counters()
+        if getattr(self, "spec", None) is not None:
+            self.spec.reset_counters()
 
     def stats(self) -> dict[str, Any]:
         """Scheduler counters since construction / the last reset_stats()."""
@@ -448,6 +515,10 @@ class ServingEngine:
                 self._page_bytes * self.n_slots * self.n_tables)
             c["pool_utilization"] = (
                 pool.n_resident / pool.n_allocatable if pool.n_allocatable else 0.0)
+        if self.spec is not None:
+            # acceptance-rate / tokens-per-target-forward counters (§14.4);
+            # numeric, so /metrics exports them with no extra wiring
+            c.update(self.spec.counters())
         return c
 
     # ------------------------------------------------------------------
@@ -464,7 +535,11 @@ class ServingEngine:
         wlen = (self.prefill_chunk + 1
                 if 2 * self.prefill_chunk <= self.max_seq
                 else min(self.prefill_chunk, self.max_seq - 1))
-        self.submit(list(range(1, wlen + 1)), max_tokens=2)
+        # spec engines warm one full draft/verify round too: γ+2 tokens
+        # makes round one speculate at full depth, compiling the draft's
+        # width-1 chain and the (n_slots, γ+1) verify off the clock
+        max_tok = 2 if self.spec is None else self.spec.gamma + 2
+        self.submit(list(range(1, wlen + 1)), max_tokens=max_tok)
         self.run_until_done()
         self.finished.clear()
         self.reset_stats()
@@ -478,6 +553,7 @@ class ServingEngine:
         sampling: SamplingParams | None = None,
         priority: int = 0,
         deadline_s: float | None = None,
+        spec_decode: bool | None = None,
     ) -> int:
         """Queue a request; returns its rid.
 
@@ -503,6 +579,13 @@ class ServingEngine:
             )
         if max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
+        # per-request opt-IN needs an engine that actually has a draft;
+        # opt-OUT (False) is always honored — the slot rides the verify
+        # forward at γ_eff=0, token-identical to plain decode
+        if spec_decode and self.spec is None:
+            raise ValueError(
+                "spec_decode=True requested but the engine was built without "
+                "speculative decoding (spec_decode=False or auto-disabled)")
         if self.paged:
             # admission-time capacity in PAGE-POOL terms: a request that
             # could never hold enough pages even running alone must be
@@ -531,6 +614,7 @@ class ServingEngine:
             rid, prompt, max_tokens, eos_id, sampling or GREEDY,
             priority=priority,
             deadline=None if deadline_s is None else now + deadline_s,
+            spec_decode=spec_decode,
         )
         req.submit_t = now
         # bounded queue (DESIGN.md §11.2): past the high-water mark, shed
@@ -614,6 +698,8 @@ class ServingEngine:
                 self.queue.remove(req)
                 self.slots[i] = req
                 self.cache_len[i] = 0
+                if self.spec is not None:
+                    self.spec.reset_slot(i)
                 if self.paged:
                     pages = self.pool.lookup_prefix(req.prompt)
                     shared = len(pages) * self.pool.page_size
@@ -634,6 +720,8 @@ class ServingEngine:
         self.finished.append(req)
         self.slots[slot] = None
         self.cache_len[slot] = 0
+        if self.spec is not None:
+            self.spec.reset_slot(slot)
         if self.paged:
             for page in self.slot_pages[slot]:
                 self.pool.unref(page)     # registered pages stay evictable
@@ -723,8 +811,10 @@ class ServingEngine:
                 tuple(req.prompt[: (pi + 1) * ps]), self.slot_pages[slot][pi]
             )
 
-    def _record(self, tokens: np.ndarray) -> None:
-        shape = tuple(tokens.shape)
+    def _record(self, tokens: np.ndarray, tag: str = "target") -> None:
+        # keyed per model: the draft has its own jit fn, so its first
+        # forward at a shape the target already saw is still a compile
+        shape = (tag,) + tuple(tokens.shape)
         if shape in self._shapes_seen:
             self._counters["shape_cache_hits"] += 1
         self._shapes_seen.add(shape)
@@ -801,6 +891,10 @@ class ServingEngine:
         self._counters["prefill_forwards"] += 1
         self._counters["prefill_tokens"] += sum(n_new.values())
         self._counters["prefill_s"] += time.perf_counter() - t0
+        if self.spec is not None:
+            # the draft's dense cache must see every prompt token: mirror
+            # the chunk with the SAME pre-update arrays the target consumed
+            self.spec.mirror_prefill(toks, cache_len, mask, write_len)
 
         # sample the first output token for every slot whose prompt just
         # completed, from that slot's last valid position in this chunk
@@ -881,7 +975,10 @@ class ServingEngine:
         self._sweep()
         self._admit()
         self._prefill_step()
-        self._decode_step()
+        if self.spec is not None:
+            self.spec.decode_round()
+        else:
+            self._decode_step()
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
@@ -937,7 +1034,7 @@ class ServingEngine:
 # keys a front-end request spec may carry (HTTP body / supervisor wire format)
 SPEC_KEYS = frozenset({
     "prompt", "max_tokens", "eos_id", "priority", "deadline_s",
-    "temperature", "top_k", "top_p", "seed",
+    "temperature", "top_k", "top_p", "seed", "spec_decode",
 })
 
 
@@ -953,6 +1050,9 @@ def submit_from_spec(engine: "ServingEngine", spec: dict[str, Any]) -> int:
         isinstance(t, int) and not isinstance(t, bool) for t in prompt
     ):
         raise ValueError("prompt must be a list of ints")
+    spec_decode = spec.get("spec_decode")
+    if spec_decode is not None and not isinstance(spec_decode, bool):
+        raise ValueError("spec_decode must be a bool")
     sampling = None
     if any(k in spec for k in ("temperature", "top_k", "top_p", "seed")):
         sampling = SamplingParams(
@@ -968,6 +1068,7 @@ def submit_from_spec(engine: "ServingEngine", spec: dict[str, Any]) -> int:
         sampling=sampling,
         priority=int(spec.get("priority", 0)),
         deadline_s=spec.get("deadline_s"),
+        spec_decode=spec_decode,
     )
 
 

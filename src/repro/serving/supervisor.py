@@ -73,6 +73,16 @@ def _worker_main(
         injector = (
             FaultInjector(FaultSpec.from_dict(fault_dict)) if fault_dict else None
         )
+        # spec-decode handshake: engine_kwargs crossed the pipe JSON-safe,
+        # so the draft arrives as a plan NAME resolved here against the
+        # same artifact (DESIGN.md §14.3) — restarts reload both plans
+        engine_kwargs = dict(engine_kwargs)
+        draft_plan = engine_kwargs.pop("draft_plan", None)
+        if engine_kwargs.get("spec_decode") and draft_plan is not None:
+            draft = load_artifact(artifact_path, plan=draft_plan,
+                                  restore_autotune=False)
+            engine_kwargs.update(
+                draft_bundle=draft.bundle, draft_params=draft.params)
         eng = ServingEngine(
             art.bundle, art.params, autotune_lut=False, faults=injector,
             **engine_kwargs,

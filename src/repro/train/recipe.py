@@ -342,10 +342,21 @@ class SoftPQ(_Stage):
 
 @dataclasses.dataclass(frozen=True)
 class Deploy(_Stage):
+    """Deploy stage; `target_plan` / `extra_plans` make the artifact
+    multi-plan (DESIGN.md §14.1). Each value is JSON-round-trippable:
+    a LUTPlan.to_dict payload, the sentinel "trained" (the arch's own
+    effective plan), or {"keeping_dense": [kind patterns]} (the trained
+    plan with those kinds kept dense). Every plan must be a sub-plan of
+    the trained one — the spec-decode pairing is
+    target_plan={"keeping_dense": ["attn/*"]}, extra_plans={"draft":
+    "trained"}."""
+
     KIND = "deploy"
 
     name: str = "deploy"
     artifact_dir: str | None = None      # default: <ckpt_dir>/artifact
+    target_plan: dict[str, Any] | str | None = None
+    extra_plans: dict[str, dict[str, Any] | str] | None = None
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "Deploy":
@@ -354,15 +365,37 @@ class Deploy(_Stage):
     def _dir(self, ctx: "_RunContext") -> str:
         return self.artifact_dir or str(ctx.ckpt_dir / "artifact")
 
+    @staticmethod
+    def _plan(spec, arch):
+        from repro.configs import effective_plan
+        from repro.core.plan import LUTPlan
+
+        if spec is None:
+            return None
+        if spec == "trained":
+            return effective_plan(arch)
+        if isinstance(spec, dict) and "keeping_dense" in spec:
+            return effective_plan(arch).keeping_dense(*spec["keeping_dense"])
+        return LUTPlan.from_dict(spec)
+
     def run(self, ctx: "_RunContext", index: int) -> dict[str, Any]:
         adir = self._dir(ctx)
-        ctx.log(f"[{self.name}] building + quantizing int8 tables -> {adir}")
+        arch = ctx.lut_bundle.arch
+        extras = {
+            name: self._plan(spec, arch)
+            for name, spec in (self.extra_plans or {}).items()
+        }
+        plans = " + ".join(["target"] + sorted(extras)) if extras else "target"
+        ctx.log(f"[{self.name}] building + quantizing int8 tables "
+                f"({plans}) -> {adir}")
         binf, iparams = convert.deploy_to_artifact(
-            ctx.lut_bundle, ctx.lut_params, adir, recipe=ctx.recipe.to_dict()
+            ctx.lut_bundle, ctx.lut_params, adir, recipe=ctx.recipe.to_dict(),
+            target_plan=self._plan(self.target_plan, arch),
+            extra_plans=extras or None,
         )
         ctx.inf_bundle, ctx.inf_params = binf, iparams
         ctx.artifact_dir = adir
-        return {"artifact_dir": adir}
+        return {"artifact_dir": adir, "plans": ["target"] + sorted(extras)}
 
     def restore(self, ctx: "_RunContext", index: int) -> None:
         from repro.serving.artifact import load_artifact
@@ -752,10 +785,16 @@ def default_recipe(
     grad_accum: int = 1,
     grad_compression: bool = False,
     eval_max_regression: float | None = None,
+    spec_draft: str | None = None,
 ) -> Recipe:
     """The historical `launch/train.py` pipeline as a Recipe: identical
     stage sequence and hyperparameters, so a fixed seed reproduces the
-    pre-recipe driver's losses exactly."""
+    pre-recipe driver's losses exactly.
+
+    `spec_draft` bakes a two-plan deploy for speculative serving
+    (DESIGN.md §14.1): the TRAINED plan ships as the "draft" and the
+    target keeps the named kinds dense (comma-separated glob patterns,
+    e.g. "attn/*") — one checkpoint, two plans, shared tables."""
     ckpt_every = max(50, steps // 4)
     dense = DensePretrain(
         steps=steps,
@@ -767,6 +806,14 @@ def default_recipe(
         return Recipe(stages=(dense,)).validate()
     distill = (DistillSpec(weight=distill_weight, temperature=distill_tau)
                if distill_weight > 0.0 else None)
+    deploy = Deploy(artifact_dir=artifact_dir)
+    if spec_draft:
+        kinds = [k.strip() for k in spec_draft.split(",") if k.strip()]
+        deploy = dataclasses.replace(
+            deploy,
+            target_plan={"keeping_dense": kinds},
+            extra_plans={"draft": "trained"},
+        )
     return Recipe(stages=(
         dense,
         CentroidInit(sample_batches=2, sample_start=10_000),
@@ -778,6 +825,6 @@ def default_recipe(
             ),
             distill=distill, ckpt_every=ckpt_every, log_every=25,
         ),
-        Deploy(artifact_dir=artifact_dir),
+        deploy,
         Eval(batch_step=99_999, max_regression=eval_max_regression),
     )).validate()

@@ -59,9 +59,9 @@ def test_artifact_roundtrip_exact_dtypes(key, tmp_path):
     assert "int8" in dtypes and "float32" in dtypes
 
     m = art.manifest
-    assert m["format"] == "lut-artifact" and m["version"] == 2
+    assert m["format"] == "lut-artifact" and m["version"] == 3
     assert m["mode"] == "lut_infer" and m["kind"] == "lm"
-    assert m["plan"]["version"] == 1 and m["plan"]["rules"]    # manifest v2 carries the plan
+    assert m["plan"]["version"] == 1 and m["plan"]["rules"]    # manifest v2+ carries the plan
     assert any(v["dtype"] == "int8" for v in m["leaves"].values())
 
 
@@ -264,3 +264,99 @@ def test_e2e_train_writes_artifact_serve_loads_it(tmp_path, capsys, monkeypatch)
     prompts = [[1, 2, 3], [5, 6, 7, 8]]
     assert _greedy(art.bundle, art.params, prompts, 4) == \
         _greedy(captured["bundle"], captured["params"], prompts, 4)
+
+
+# ---------------------------------------------------------------------------
+# multi-plan artifacts (manifest v3, DESIGN.md §14.1)
+
+def _two_plan_setup(key):
+    """One random LUT_TRAIN state deployed under two plans: the full
+    trained plan ('draft') and its attn-kept-dense sub-plan ('target')."""
+    from repro.configs import effective_plan
+
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, d_model=64,
+                       vocab=128, d_ff=128)
+    blut = build_model(arch, Mode.LUT_TRAIN)
+    lparams = blut.init(key)
+    trained = effective_plan(arch)
+    tb, tp = convert.deploy_lut_train_params(
+        blut, lparams, plan=trained.keeping_dense("attn/*"))
+    db, dp = convert.deploy_lut_train_params(blut, lparams, plan=trained)
+    return (tb, tp), (db, dp)
+
+
+def test_artifact_multi_plan_roundtrip(key, tmp_path):
+    """Both plans round-trip bit-exactly through one shared array payload,
+    and the overlapping table leaves are deduplicated on disk."""
+    (tb, tp), (db, dp) = _two_plan_setup(key)
+    save_artifact(tmp_path / "art", tb, tp, extra_plans={"draft": (db, dp)})
+
+    art = load_artifact(tmp_path / "art")
+    assert art.plan_name == "target" and art.plan_names == ["target", "draft"]
+    for a, b in zip(jax.tree_util.tree_leaves(tp),
+                    jax.tree_util.tree_leaves(art.params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    draft = load_artifact(tmp_path / "art", plan="draft")
+    assert draft.plan_name == "draft"
+    for a, b in zip(jax.tree_util.tree_leaves(dp),
+                    jax.tree_util.tree_leaves(draft.params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the two bundles differ only in replacement plan
+    assert draft.bundle.arch != art.bundle.arch
+
+    m = art.manifest
+    leaves = m["plans"]["draft"]["leaves"]
+    shared = [p for p, rec in leaves.items() if rec["key"] == p]
+    private = [p for p, rec in leaves.items()
+               if rec["key"].startswith("plan.draft/")]
+    # the plans overlap on every non-attn LUT site -> real sharing, and the
+    # draft's attn tables exist only on the draft -> real private leaves
+    assert shared and private
+    assert all(rec["key"] == p or rec["key"] == f"plan.draft/{p}"
+               for p, rec in leaves.items())
+
+
+def test_artifact_unknown_plan_lists_available(key, tmp_path):
+    (tb, tp), (db, dp) = _two_plan_setup(key)
+    save_artifact(tmp_path / "art", tb, tp, extra_plans={"draft": (db, dp)})
+    with pytest.raises(ValueError, match=r"no plan 'tiny'.*draft"):
+        load_artifact(tmp_path / "art", plan="tiny")
+
+
+def test_artifact_reserved_plan_name_rejected(key, tmp_path):
+    (tb, tp), (db, dp) = _two_plan_setup(key)
+    with pytest.raises(ValueError, match="reserved"):
+        save_artifact(tmp_path / "art", tb, tp,
+                      extra_plans={"target": (db, dp)})
+
+
+def test_artifact_v2_manifest_still_loads(key, tmp_path):
+    """A pre-multi-plan (v2) manifest loads as a single-plan artifact; a
+    named-plan request fails with the single-plan explanation."""
+    bundle, params = _deployed_bundle(key)
+    d = save_artifact(tmp_path / "art", bundle, params)
+    manifest = json.loads((d / "manifest.json").read_text())
+    assert "plans" not in manifest
+    manifest["version"] = 2
+    (d / "manifest.json").write_text(json.dumps(manifest))
+
+    art = load_artifact(d)
+    assert art.plan_names == ["target"]
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(art.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="single-plan"):
+        load_artifact(d, plan="draft")
+
+
+def test_describe_artifact_lists_plans(key, tmp_path):
+    from repro.serving.artifact import describe_artifact
+
+    (tb, tp), (db, dp) = _two_plan_setup(key)
+    save_artifact(tmp_path / "art", tb, tp, extra_plans={"draft": (db, dp)})
+    out = describe_artifact(tmp_path / "art")
+    assert "target" in out and "draft" in out
+    assert "FLOPs vs target" in out and "shared" in out

@@ -89,3 +89,61 @@ def test_tape_capture_covers_lut_sites(setup):
     assert len(tape.records) == 3 * 7 + 1
     keys = {s.tape_key for s in dense.sites() if s.tape_key is not None}
     assert set(tape.records) == keys
+
+
+# ---------------------------------------------------------------------------
+# cross-plan deploy (DESIGN.md §14.1): one LUT_TRAIN checkpoint, many plans
+
+def test_cross_plan_deploy_shares_tables(setup):
+    """Deploying the trained state under keeping_dense('attn/*') drops the
+    attn tables back to dense weights while every other site's int8 table
+    is byte-identical to the full-plan deploy — the invariant the artifact
+    dedup (and the spec-decode shared-table draft) relies on."""
+    from repro.configs import effective_plan
+
+    arch, data, dense, dparams, blut, lparams = setup
+    trained = effective_plan(arch)
+    _, full = convert.deploy_lut_train_params(blut, lparams, plan=trained)
+    tb, sub = convert.deploy_lut_train_params(
+        blut, lparams, plan=trained.keeping_dense("attn/*"))
+
+    fflat = convert._flat_paths(full)
+    sflat = convert._flat_paths(sub)
+    # the sub-plan carries dense attn weights the full plan replaced ...
+    dense_attn = [p for p in sflat
+                  if "/attn/" in p and p.endswith("/w") and p not in fflat]
+    assert dense_attn
+    # ... and no attn tables of its own
+    assert not any("/attn/" in p and p.endswith("/table") for p in sflat)
+
+    shared = [p for p, v in sflat.items()
+              if p in fflat and fflat[p].shape == v.shape]
+    tables = [p for p in shared if p.endswith("/table")]
+    assert tables                      # ffn sites overlap across the plans
+    for p in shared:
+        np.testing.assert_array_equal(np.asarray(sflat[p]),
+                                      np.asarray(fflat[p]))
+
+    # the sub-plan deploy still serves: loss is finite and close to the
+    # full deploy (both share the non-attn tables; attn is exact dense)
+    batch = data.batch_at(3)
+    l_sub = float(tb.loss(sub, batch, compute_dtype=jnp.float32))
+    assert np.isfinite(l_sub)
+
+
+def test_cross_plan_superset_plan_raises(setup):
+    """A deploy plan may only replace sites the TRAINED plan replaced —
+    a checkpoint trained under keeping_dense('attn/*') has no attn
+    centroids, so deploying it under the full plan must fail with the
+    actionable message, not a raw KeyError."""
+    import dataclasses
+
+    from repro.configs import build_model as _bm, effective_plan
+
+    arch, *_ = setup
+    trained = effective_plan(arch)
+    arch_sub = dataclasses.replace(arch, lut_plan=trained.keeping_dense("attn/*"))
+    blut_sub = _bm(arch_sub, Mode.LUT_TRAIN)
+    lp_sub = blut_sub.init(jax.random.PRNGKey(5))
+    with pytest.raises(ValueError, match="keeping_dense"):
+        convert.deploy_lut_train_params(blut_sub, lp_sub, plan=trained)

@@ -302,7 +302,7 @@ def _greedy(bundle, params, prompts, n_tokens):
 def test_heterogeneous_plan_full_lifecycle(key, tmp_path):
     """K=16 MLP + K=8 attention, first and last layers dense: builds,
     trains one step, deploys to an artifact, and reloads with
-    token-identical serving output (manifest v2 with the plan)."""
+    token-identical serving output (manifest v2+ carries the plan)."""
     from repro.optim import SOFT_PQ_RULES, AdamW, lut_frozen_mask
     from repro.train.train_step import make_train_step
 
@@ -330,7 +330,7 @@ def test_heterogeneous_plan_full_lifecycle(key, tmp_path):
 
     binf, iparams = convert.deploy_to_artifact(blut, lparams, tmp_path / "art")
     art = load_artifact(tmp_path / "art")
-    assert art.manifest["version"] == 2
+    assert art.manifest["version"] == 3
     assert art.bundle.arch.lut_plan == arch.lut_plan
     prompts = [[1, 2, 3, 4, 5], [7, 8, 9]]
     assert _greedy(binf, iparams, prompts, 5) == \

@@ -1,0 +1,201 @@
+"""Speculative decoding (DESIGN.md §14): the draft/verify scheduler must be
+an invisible optimization — emitted tokens byte-identical to plain decode in
+greedy AND sampled modes (the emitted-token rule draws every token from the
+target's logits with the non-spec PRNG counters), with per-slot rollback
+across dense and paged KV, auto-disable on recurrent-state bundles, and
+per-request opt-out.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+from repro.serving.engine import ServingEngine, submit_from_spec
+from repro.serving.sampling import SamplingParams
+
+PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9], [11, 12], [20, 21, 22, 23]]
+MAX_TOK = 6
+
+
+@pytest.fixture(scope="module")
+def lm():
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, d_model=64,
+                       vocab=128, d_ff=128)
+    bundle = build_model(arch, Mode.LUT_INFER)
+    params = bundle.init(jax.random.PRNGKey(0))
+    # a DIVERGENT draft: same architecture, independently initialized —
+    # proposals rarely match the target, exercising rejection + rollback
+    draft_params = bundle.init(jax.random.PRNGKey(9))
+    return bundle, params, draft_params
+
+
+def _serve(bundle, params, *, sampling=None, spec_flags=None, **eng_kw):
+    eng = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                        prefill_chunk=4, autotune_lut=False,
+                        compute_dtype=jnp.float32, **eng_kw)
+    for i, p in enumerate(PROMPTS):
+        flag = None if spec_flags is None else spec_flags[i]
+        eng.submit(p, max_tokens=MAX_TOK, sampling=sampling, spec_decode=flag)
+    done = sorted(eng.run_until_done(max_steps=2000), key=lambda r: r.rid)
+    assert all(r.status == "ok" for r in done), done
+    return [r.out_tokens for r in done], eng.stats()
+
+
+def test_greedy_parity_divergent_draft(lm):
+    """Rejections dominate with an independent draft, yet output is exact."""
+    bundle, params, draft_params = lm
+    plain, _ = _serve(bundle, params)
+    spec, st = _serve(bundle, params, spec_decode=True, spec_gamma=3,
+                      draft_bundle=bundle, draft_params=draft_params)
+    assert spec == plain
+    assert st["spec_tokens_proposed"] > 0
+    # the divergent draft must actually get rejected sometimes, or this
+    # test isn't exercising rollback
+    assert st["spec_tokens_accepted"] < st["spec_tokens_proposed"]
+    assert st["target_forwards_per_token"] <= 1.0
+
+
+def test_greedy_parity_self_draft(lm):
+    """Draft == target: near-total acceptance, tokens still identical."""
+    bundle, params, _ = lm
+    plain, _ = _serve(bundle, params)
+    spec, st = _serve(bundle, params, spec_decode=True, spec_gamma=3)
+    assert spec == plain
+    assert st["spec_tokens_accepted"] > 0
+    assert st["target_forwards_per_token"] < 1.0
+    assert st["spec_gamma"] == 3
+
+
+def test_greedy_parity_paged_rewind(lm):
+    """Paged KV: rejected positions roll back via page pop/unref, and the
+    block tables stay consistent (output parity is the proof)."""
+    bundle, params, draft_params = lm
+    plain, _ = _serve(bundle, params, paged=True, page_size=4,
+                      prefix_sharing=False)
+    spec, st = _serve(bundle, params, paged=True, page_size=4,
+                      spec_decode=True, spec_gamma=3,
+                      draft_bundle=bundle, draft_params=draft_params)
+    assert spec == plain
+    assert st["spec_pages_rewound"] > 0     # rejections crossed page edges
+
+
+def test_sampled_parity(lm):
+    """Sampled mode: the emitted-token rule keys every verify position with
+    the non-spec stream counter, so seeded sampling is reproduced exactly —
+    not just in distribution."""
+    bundle, params, draft_params = lm
+    sampling = SamplingParams(temperature=0.9, top_k=20, seed=42)
+    plain, _ = _serve(bundle, params, sampling=sampling)
+    spec, st = _serve(bundle, params, sampling=sampling,
+                      spec_decode=True, spec_gamma=3,
+                      draft_bundle=bundle, draft_params=draft_params)
+    assert spec == plain
+    assert st["spec_tokens_proposed"] > 0
+
+
+def test_per_request_opt_out(lm):
+    """spec_decode=False requests ride the verify forward at width 1 —
+    plain decode semantics inside a speculating engine."""
+    bundle, params, _ = lm
+    plain, _ = _serve(bundle, params)
+    flags = [False, None, False, None]      # mix opt-outs with defaults
+    spec, st = _serve(bundle, params, spec_decode=True, spec_gamma=3,
+                      spec_flags=flags)
+    assert spec == plain
+
+
+def test_spec_request_on_plain_engine_raises(lm):
+    bundle, params, _ = lm
+    eng = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                        prefill_chunk=4, autotune_lut=False)
+    with pytest.raises(ValueError, match="spec_decode"):
+        eng.submit([1, 2], max_tokens=2, spec_decode=True)
+    # opting OUT is always legal — it's the no-op default
+    eng.submit([1, 2], max_tokens=2, spec_decode=False)
+    assert all(r.status == "ok" for r in eng.run_until_done())
+
+
+def test_submit_from_spec_validates(lm):
+    bundle, params, _ = lm
+    eng = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                        prefill_chunk=4, autotune_lut=False,
+                        spec_decode=True, spec_gamma=2)
+    rid = submit_from_spec(eng, {"prompt": [1, 2], "max_tokens": 2,
+                                 "spec_decode": True})
+    assert isinstance(rid, int)
+    with pytest.raises(ValueError, match="spec_decode must be a bool"):
+        submit_from_spec(eng, {"prompt": [1, 2], "spec_decode": 1})
+    with pytest.raises(ValueError, match="unknown request fields"):
+        submit_from_spec(eng, {"prompt": [1, 2], "draft_gamma": 3})
+    assert all(r.status == "ok" for r in eng.run_until_done())
+
+
+def test_draft_must_be_interchangeable(lm):
+    """A draft with a different vocab can't propose tokens for the target."""
+    bundle, params, _ = lm
+    arch2 = reduce_arch(get_arch("qwen3_1p7b"), n_layers=2, d_model=64,
+                        vocab=64, d_ff=128)
+    b2 = build_model(arch2, Mode.LUT_INFER)
+    with pytest.raises(ValueError, match="vocab"):
+        ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                      prefill_chunk=4, autotune_lut=False,
+                      spec_decode=True, draft_bundle=b2,
+                      draft_params=b2.init(jax.random.PRNGKey(1)))
+
+
+def test_draft_bundle_requires_params(lm):
+    bundle, params, _ = lm
+    with pytest.raises(ValueError, match="draft"):
+        ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                      prefill_chunk=4, autotune_lut=False,
+                      spec_decode=True, draft_bundle=bundle)
+
+
+def test_hybrid_auto_disables_with_warning():
+    """Bundles with per-slot recurrent state (hybrid SSM) can't rewind a
+    Mamba hidden state to an arbitrary earlier position — the engine must
+    fall back to plain decode, loudly, and still serve correctly."""
+    arch = reduce_arch(get_arch("zamba2_1p2b"), n_layers=2, d_model=64,
+                       vocab=128, d_ff=128)
+    bundle = build_model(arch, Mode.LUT_INFER)
+    params = bundle.init(jax.random.PRNGKey(0))
+    with pytest.warns(UserWarning, match="spec_decode disabled"):
+        eng = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                            prefill_chunk=4, autotune_lut=False,
+                            spec_decode=True, spec_gamma=3)
+    assert eng.spec is None
+    # and a spec request on the auto-disabled engine is rejected like any
+    # other non-spec engine
+    with pytest.raises(ValueError, match="spec_decode"):
+        eng.submit([1, 2], max_tokens=2, spec_decode=True)
+    eng.submit([1, 2, 3], max_tokens=3)
+    done = eng.run_until_done(max_steps=2000)
+    assert [r.status for r in done] == ["ok"]
+
+
+def test_stats_counters_flow(lm):
+    """Every §14.4 counter surfaces through stats() after a spec run and
+    resets with reset_stats()."""
+    bundle, params, _ = lm
+    eng = ServingEngine(bundle, params, n_slots=2, max_seq=32,
+                        prefill_chunk=4, autotune_lut=False,
+                        spec_decode=True, spec_gamma=2)
+    eng.submit([1, 2, 3], max_tokens=4)
+    eng.run_until_done(max_steps=2000)
+    st = eng.stats()
+    for k in ("spec_rounds", "spec_slot_rounds", "spec_draft_forwards",
+              "spec_verify_forwards", "spec_tokens_proposed",
+              "spec_tokens_accepted", "spec_bonus_tokens",
+              "spec_tokens_emitted", "spec_acceptance_rate",
+              "target_forwards_per_token", "spec_gamma"):
+        assert k in st, k
+    # prefill samples token 1 of 4; the spec rounds emit the other three
+    assert st["spec_tokens_emitted"] == st["decode_tokens"] == 3
+    eng.reset_stats()
+    st2 = eng.stats()
+    assert st2["spec_rounds"] == 0 and st2["spec_tokens_emitted"] == 0
