@@ -32,6 +32,7 @@ MODULES = [
     "serving_bench",
     "serving_spec",
     "serving_faults",
+    "serving_router",
     "roofline_table",
 ]
 
@@ -42,6 +43,7 @@ JSON_ARTIFACTS = {
     "serving_bench": _ROOT / "BENCH_serving.json",
     "serving_spec": _ROOT / "BENCH_spec.json",
     "serving_faults": _ROOT / "BENCH_faults.json",
+    "serving_router": _ROOT / "BENCH_router.json",
     "fig13_replaced_layers": _ROOT / "BENCH_plans.json",
 }
 

@@ -127,9 +127,39 @@ def main(argv: list[str] | None = None) -> None:
                          "--artifact; DESIGN.md §11.4)")
     ap.add_argument("--max-restarts", type=int, default=3,
                     help="consecutive worker crashes before the supervisor "
-                         "gives up (with --supervise)")
+                         "gives up (with --supervise or --replicas)")
+    # multi-replica router (DESIGN.md §15)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="run N crash-supervised engine replicas off the one "
+                         "artifact behind an EngineRouter (requires "
+                         "--artifact and --port; implies supervision)")
+    ap.add_argument("--routing", choices=("least_loaded", "prefix_affinity"),
+                    default="least_loaded",
+                    help="router placement policy: least-loaded live replica, "
+                         "or rendezvous-hash on the first KV page of the "
+                         "prompt (same-prefix sessions share a replica and "
+                         "its prefix cache) with load-based spill")
+    ap.add_argument("--fault-json", default=None,
+                    help="JSON FaultSpec (e.g. '{\"kill_at_step\": 4}') "
+                         "injected into ONE replica's worker, for failover "
+                         "testing (with --replicas)")
+    ap.add_argument("--fault-replica", type=int, default=0,
+                    help="replica index --fault-json applies to")
     args = ap.parse_args(argv)
 
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1:
+        if not args.artifact:
+            ap.error("--replicas > 1 requires --artifact (each replica's "
+                     "worker restarts from the artifact directory)")
+        if args.port is None:
+            ap.error("--replicas > 1 requires --port")
+        if args.tp > 1:
+            ap.error("--replicas does not compose with --tp > 1")
+    if args.fault_json is not None and args.replicas < 2:
+        ap.error("--fault-json needs --replicas >= 2 (a survivor must "
+                 "exist to fail over to)")
     if args.supervise and not args.artifact:
         ap.error("--supervise requires --artifact (the worker restarts "
                  "from the artifact directory)")
@@ -290,7 +320,28 @@ def _serve_http(args) -> None:
         prefill_chunk=args.prefill_chunk, max_queue=args.max_queue,
         **_paged_kwargs(args), **_spec_kwargs(args),
     )
-    if args.supervise:
+    if args.replicas > 1:
+        import json
+
+        from repro.serving.faults import FaultSpec
+        from repro.serving.router import EngineRouter
+
+        faults = None
+        if args.fault_json is not None:
+            faults = [None] * args.replicas
+            faults[args.fault_replica] = FaultSpec.from_dict(
+                json.loads(args.fault_json))
+        backend = EngineRouter(
+            args.artifact, replicas=args.replicas, routing=args.routing,
+            engine_kwargs=engine_kwargs, faults=faults,
+            supervisor_kwargs={"max_restarts": args.max_restarts},
+        )
+        if not backend.wait_ready(timeout=600) or not backend.healthy:
+            print("no router replica came up", file=sys.stderr)
+            sys.exit(1)
+        source = (f"artifact {args.artifact} x{args.replicas} replicas "
+                  f"({args.routing})")
+    elif args.supervise:
         from repro.serving.supervisor import EngineSupervisor
 
         backend = EngineSupervisor(

@@ -279,6 +279,24 @@ def _resolve_artifact_dir(directory: str | os.PathLike) -> pathlib.Path:
     return directory
 
 
+def check_artifact_dir(directory: str | os.PathLike) -> dict[str, Any]:
+    """Cheap serveability probe: resolve the directory (honoring the .old
+    crash fallback), read the manifest, and validate format/version —
+    WITHOUT touching the array payload. Raises FileNotFoundError when the
+    directory or manifest is gone and ValueError when the manifest fails
+    validation; returns the manifest dict otherwise.
+
+    Used by the serving supervisor before every worker (re)spawn so an
+    artifact that disappeared or was corrupted between restarts fails
+    closed with an actionable error instead of burning `max_restarts` on a
+    crash loop (DESIGN.md §15.3)."""
+    resolved = _resolve_artifact_dir(pathlib.Path(directory))
+    try:
+        return _read_manifest(resolved)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{resolved}: unreadable {_MANIFEST}: {e}") from e
+
+
 def load_artifact(
     directory: str | os.PathLike, *, plan: str = TARGET_PLAN,
     restore_autotune: bool = True

@@ -1038,10 +1038,18 @@ SPEC_KEYS = frozenset({
 })
 
 
-def submit_from_spec(engine: "ServingEngine", spec: dict[str, Any]) -> int:
-    """Submit a front-end request spec (a plain JSON-safe dict, SPEC_KEYS)
-    to an engine. Shared by the HTTP server's pump and the supervised
-    worker so both sides of the process boundary speak one format."""
+def validate_spec(spec: dict[str, Any]) -> None:
+    """Type-check a front-end request spec (SPEC_KEYS) without an engine.
+
+    Shared by `submit_from_spec` and the process-boundary backends
+    (`EngineSupervisor.submit`, `EngineRouter.submit`), which ship the spec
+    to a worker process as-is: a malformed field must be rejected with a
+    ValueError at the door — HTTP 400 — not discovered as a worker crash
+    (or a confusing failure deep inside the engine) after the pipe hop.
+    Raises ValueError; returns None on a well-formed spec.
+    """
+    if not isinstance(spec, dict):
+        raise ValueError("request spec must be a JSON object")
     unknown = set(spec) - SPEC_KEYS
     if unknown:
         raise ValueError(f"unknown request fields: {sorted(unknown)}")
@@ -1053,6 +1061,23 @@ def submit_from_spec(engine: "ServingEngine", spec: dict[str, Any]) -> int:
     spec_decode = spec.get("spec_decode")
     if spec_decode is not None and not isinstance(spec_decode, bool):
         raise ValueError("spec_decode must be a bool")
+    priority = spec.get("priority")
+    if priority is not None and (
+        isinstance(priority, bool) or not isinstance(priority, int)
+    ):
+        raise ValueError(f"priority must be an int, got {priority!r}")
+    deadline_s = spec.get("deadline_s")
+    if deadline_s is not None and (
+        isinstance(deadline_s, bool) or not isinstance(deadline_s, (int, float))
+    ):
+        raise ValueError(f"deadline_s must be a number, got {deadline_s!r}")
+
+
+def submit_from_spec(engine: "ServingEngine", spec: dict[str, Any]) -> int:
+    """Submit a front-end request spec (a plain JSON-safe dict, SPEC_KEYS)
+    to an engine. Shared by the HTTP server's pump and the supervised
+    worker so both sides of the process boundary speak one format."""
+    validate_spec(spec)
     sampling = None
     if any(k in spec for k in ("temperature", "top_k", "top_p", "seed")):
         sampling = SamplingParams(
@@ -1062,13 +1087,13 @@ def submit_from_spec(engine: "ServingEngine", spec: dict[str, Any]) -> int:
             seed=int(spec.get("seed", 0)),
         )
     return engine.submit(
-        list(prompt),
+        list(spec["prompt"]),
         max_tokens=int(spec.get("max_tokens", 16)),
         eos_id=spec.get("eos_id"),
         sampling=sampling,
-        priority=int(spec.get("priority", 0)),
+        priority=spec.get("priority") or 0,
         deadline_s=spec.get("deadline_s"),
-        spec_decode=spec_decode,
+        spec_decode=spec.get("spec_decode"),
     )
 
 

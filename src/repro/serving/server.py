@@ -177,7 +177,10 @@ _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
 
 
 def metrics_text(stats: dict[str, Any], prefix: str = "lutnn_serving_") -> str:
-    """Prometheus text exposition of every numeric stat."""
+    """Prometheus text exposition of every numeric stat.
+
+    A `per_replica` sub-dict (EngineRouter) renders as labelled gauges —
+    `lutnn_replica_<stat>{replica="i"}` — one TYPE line per family."""
     lines = []
     for k in sorted(stats):
         v = stats[k]
@@ -186,6 +189,19 @@ def metrics_text(stats: dict[str, Any], prefix: str = "lutnn_serving_") -> str:
         name = prefix + k
         lines.append(f"# TYPE {name} gauge")
         lines.append(f"{name} {v}")
+    per = stats.get("per_replica")
+    if isinstance(per, dict):
+        families: dict[str, list[str]] = {}
+        for rep in sorted(per, key=lambda r: (len(r), r)):
+            for k in sorted(per[rep]):
+                v = per[rep][k]
+                if isinstance(v, bool) or not isinstance(v, (int, float)):
+                    continue
+                families.setdefault(f"lutnn_replica_{k}", []).append(
+                    f'lutnn_replica_{k}{{replica="{rep}"}} {v}')
+        for name in sorted(families):
+            lines.append(f"# TYPE {name} gauge")
+            lines.extend(families[name])
     return "\n".join(lines) + "\n"
 
 

@@ -45,6 +45,7 @@ import time
 from typing import Any, Callable
 
 from repro.distributed.fault_tolerance import Backoff, StepGuard
+from repro.serving.engine import validate_spec
 
 KILL_EXIT = 43               # worker exit code for an InjectedKill hard crash
 _STATS_PERIOD_S = 0.25
@@ -192,6 +193,7 @@ class EngineSupervisor:
         self._cancelbox: list[int] = []   # grids to cancel in the worker
         self._next_grid = 0
         self._stats: dict[str, Any] = {}
+        self._stats_t = time.monotonic()  # when _stats last heard from a worker
         self._last_crash: str | None = None
         self.counters = {"spawns": 0, "restarts": 0, "requeued": 0, "lost": 0}
         self._stop = False
@@ -213,6 +215,10 @@ class EngineSupervisor:
 
     def submit(self, spec: dict[str, Any],
                on_event: Callable[[tuple[str, Any]], None] | None = None) -> int:
+        # validate BEFORE the pipe hop: a malformed field (non-numeric
+        # priority/deadline_s, bad prompt) must surface as a ValueError here
+        # — HTTP 400 — not as a worker crash loop on the far side
+        validate_spec(spec)
         with self._lock:
             if not self.healthy:
                 raise RuntimeError(
@@ -249,6 +255,9 @@ class EngineSupervisor:
             s["backend"] = "supervised"
             s["pending"] = sum(not r.done for r in self._requests.values())
             s["failed"] = int(self._failed)
+            # how stale the worker-reported gauges (queue_depth,
+            # active_slots, ...) are — the router's load scorer caps on this
+            s["stats_age_s"] = time.monotonic() - self._stats_t
         return s
 
     def pending(self) -> int:
@@ -321,6 +330,7 @@ class EngineSupervisor:
         """
         with self._lock:
             self._stats = stats
+            self._stats_t = time.monotonic()
             for grid in sorted(g for g, r in self._requests.items() if not r.done):
                 st = self._requests[grid]
                 if st.in_worker:          # was lost with the previous worker
@@ -372,14 +382,48 @@ class EngineSupervisor:
         elif kind == "stats":
             with self._lock:
                 self._stats = payload
+                self._stats_t = time.monotonic()
         elif kind == "crash":
             self._last_crash = payload
+
+    def _fail_closed(self, reason: str) -> None:
+        """Terminal supervisor failure: resolve every live rid as "error",
+        refuse new submits, unblock wait_ready — nothing hangs forever."""
+        self._last_crash = reason
+        with self._lock:
+            self._failed = True
+            for st in [r for r in self._requests.values() if not r.done]:
+                self.counters["lost"] += 1
+                self._finish(st, "error")
+        self._ready.set()
+
+    def _check_artifact(self) -> str | None:
+        """Parent-side serveability probe before every worker (re)spawn.
+
+        A worker built from a vanished or corrupted artifact dies on load,
+        restarts, dies again — a crash loop that burns `max_restarts` on a
+        condition no respawn can fix (and the multi-replica router multiplies
+        how often this path runs). Catch it here and fail closed with an
+        actionable error instead. Returns the error string, or None when the
+        artifact still looks serveable."""
+        from repro.serving.artifact import check_artifact_dir
+
+        try:
+            check_artifact_dir(self.artifact_path)
+        except (FileNotFoundError, ValueError, OSError) as e:
+            return (f"artifact at {self.artifact_path} is not serveable: {e} "
+                    f"— refusing to (re)spawn a worker that cannot load it")
+        return None
 
     def _run(self) -> None:
         consecutive = 0
         incarnation = 0
         proc = None
         while not self._stop:
+            err = self._check_artifact()
+            if err is not None:
+                self._fail_closed(err)
+                return
             fault_dict = None
             if self.faults is not None and (incarnation == 0 or not self.faults_once):
                 fault_dict = self.faults.to_dict()
@@ -431,13 +475,11 @@ class EngineSupervisor:
             self.counters["restarts"] += 1
             parent_conn.close()
             if consecutive > self.max_restarts:
-                with self._lock:
-                    self._failed = True
-                    live = [r for r in self._requests.values() if not r.done]
-                    for st in live:
-                        self.counters["lost"] += 1
-                        self._finish(st, "error")
-                self._ready.set()         # unblock wait_ready on hard failure
+                self._fail_closed(
+                    self._last_crash
+                    or f"{consecutive} consecutive worker crashes "
+                       f"(max_restarts={self.max_restarts})"
+                )
                 return
             time.sleep(self.backoff.delay(consecutive - 1))
         if proc is not None and self._stop:

@@ -1,0 +1,258 @@
+"""Multi-replica router (DESIGN.md §15): least-loaded placement, failover
+token parity (kill a replica mid-stream, replay byte-identical on the
+survivor), prefix-affinity stickiness with load-based spill, all-dead
+fail-closed. Spawns 2 real worker processes per router, so these sit with
+test_supervisor.py among the slowest serving tests."""
+
+import threading
+
+import jax
+import pytest
+
+from repro.configs import build_model, get_arch, reduce_arch
+from repro.core.amm import Mode
+from repro.serving.artifact import save_artifact
+from repro.serving.faults import FaultSpec
+from repro.serving.router import EngineRouter, affinity_key, _hrw_weight
+from repro.serving.supervisor import EngineSupervisor
+
+ENGINE_KW = dict(n_slots=2, max_seq=64, prefill_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    arch = reduce_arch(get_arch("qwen3_1p7b"), n_layers=1)
+    bundle = build_model(arch, Mode.DENSE)
+    params = bundle.init(jax.random.PRNGKey(0))
+    path = tmp_path_factory.mktemp("router") / "artifact"
+    save_artifact(path, bundle, params)
+    return path
+
+
+def _specs(n=3):
+    return [{"prompt": [i * 3 + 1, i * 3 + 2, i * 3 + 3], "max_tokens": 4}
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def baseline(artifact):
+    """Fault-free single-supervisor reference tokens, per spec index."""
+    ref = EngineSupervisor(artifact, engine_kwargs=ENGINE_KW)
+    try:
+        grids = [ref.submit(s) for s in _specs()]
+        states = {g: ref.wait(g, timeout=300) for g in grids}
+        assert all(st.status == "ok" for st in states.values())
+        return [list(states[g].tokens) for g in grids]
+    finally:
+        ref.close()
+
+
+# ---------------------------------------------------------------------------
+# construction + pure routing math
+# ---------------------------------------------------------------------------
+
+def test_router_validates_construction(tmp_path):
+    with pytest.raises(ValueError, match="replicas"):
+        EngineRouter(tmp_path, replicas=0)
+    with pytest.raises(ValueError, match="routing"):
+        EngineRouter(tmp_path, routing="round_robin")
+    with pytest.raises(ValueError, match="faults"):
+        EngineRouter(tmp_path, replicas=2, faults=[None, None, None])
+
+
+def test_affinity_key_and_rendezvous_stability():
+    # the key is the first full KV page (kv_pool's share unit)
+    assert affinity_key(list(range(40)), 16) == tuple(range(16))
+    assert affinity_key([1, 2, 3], 16) == (1, 2, 3)   # short prompt: whole
+    key = affinity_key(list(range(16)), 16)
+    ranked = sorted(range(4), key=lambda i: -_hrw_weight(key, i))
+    # rendezvous property: removing the winner promotes the runner-up
+    # without re-ranking anyone else
+    survivors = [i for i in ranked if i != ranked[0]]
+    reranked = sorted(survivors, key=lambda i: -_hrw_weight(key, i))
+    assert reranked == survivors
+
+
+# ---------------------------------------------------------------------------
+# least-loaded placement + token parity through the router
+# ---------------------------------------------------------------------------
+
+def test_least_loaded_spreads_and_token_parity(artifact, baseline):
+    r = EngineRouter(artifact, replicas=2, engine_kwargs=ENGINE_KW)
+    try:
+        assert r.wait_ready(timeout=300)
+        assert r.healthy
+        grids = [r.submit(s) for s in _specs()]
+        states = {g: r.wait(g, timeout=300) for g in grids}
+        for i, g in enumerate(grids):
+            assert states[g].status == "ok"
+            # the router adds nothing to the token stream: byte-identical
+            # to a single supervised engine
+            assert states[g].tokens == baseline[i], g
+        s = r.stats()
+        assert s["backend"] == "router"
+        assert s["routed"] == 3 and s["lost"] == 0 and s["failovers"] == 0
+        assert s["replicas"] == 2 and s["replicas_live"] == 2
+        # req 0 lands on replica 0 (tie -> lowest index); while it is in
+        # flight replica 1 is strictly less loaded, so req 1 must go there
+        per = s["per_replica"]
+        assert per["0"]["routed"] >= 1 and per["1"]["routed"] >= 1
+        assert per["0"]["routed"] + per["1"]["routed"] == 3
+        assert s["pending"] == 0
+    finally:
+        r.close()
+    assert "live" in r.exit_summary
+
+
+# ---------------------------------------------------------------------------
+# failover: kill one replica mid-stream, replay byte-identical on survivor
+# ---------------------------------------------------------------------------
+
+def test_failover_token_parity_after_replica_death(artifact, baseline):
+    # replica 0 crash-loops (fault respawns every incarnation) past
+    # max_restarts and fails closed; the router must requeue its rids onto
+    # replica 1 and the replayed generations must match the fault-free run
+    events: list[tuple[int, tuple]] = []
+    ev_lock = threading.Lock()
+
+    def sub(i):
+        def on_event(ev):
+            with ev_lock:
+                events.append((i, ev))
+        return on_event
+
+    r = EngineRouter(
+        artifact, replicas=2, engine_kwargs=ENGINE_KW, retry_budget=2,
+        faults=[FaultSpec(kill_at_step=1), None],
+        supervisor_kwargs=dict(faults_once=False, max_restarts=1,
+                               healthy_after_s=3600.0),
+    )
+    try:
+        assert r.wait_ready(timeout=300)
+        grids = [r.submit(s, on_event=sub(i))
+                 for i, s in enumerate(_specs())]
+        states = {g: r.wait(g, timeout=300) for g in grids}
+        for i, g in enumerate(grids):
+            st = states[g]
+            assert st.status == "ok", (g, st.status)   # nothing lost
+            assert st.tokens == baseline[i], g         # byte-identical replay
+        s = r.stats()
+        assert s["failovers"] == 1                     # replica 0 died once
+        assert s["requeues"] >= 1 and s["lost"] == 0
+        assert s["replicas_live"] == 1 and s["replicas_dead"] == 1
+        assert r.healthy                               # degraded, not down
+        # a request that had streamed tokens before the failover told its
+        # subscriber to discard them via the ("restart", None) event
+        with ev_lock:
+            per_req: dict[int, list] = {}
+            for i, ev in events:
+                per_req.setdefault(i, []).append(ev)
+        failed_over = [g for g in grids if states[g].retries > 0]
+        assert failed_over                             # the fault did fire
+        for g in failed_over:
+            streamed: list[int] = []
+            for kind, payload in per_req.get(g, []):
+                if kind == "tokens":
+                    streamed.extend(payload)
+                elif kind == "restart":
+                    streamed = []                      # discard, per contract
+            # a subscriber that honors the discard events reconstructs
+            # exactly the final token list — pre-crash partials never leak
+            assert streamed == states[g].tokens, g
+
+        # the dead replica refuses direct submits, the router still serves
+        lone = r.submit({"prompt": [42, 43], "max_tokens": 2})
+        assert r.wait(lone, timeout=300).status == "ok"
+    finally:
+        r.close()
+    assert "dead" in r.exit_summary
+
+
+def test_all_replicas_dead_fails_closed(artifact):
+    r = EngineRouter(
+        artifact, replicas=2, engine_kwargs=ENGINE_KW, retry_budget=1,
+        faults=[FaultSpec(kill_at_step=0), FaultSpec(kill_at_step=0)],
+        supervisor_kwargs=dict(faults_once=False, max_restarts=1,
+                               healthy_after_s=3600.0),
+    )
+    try:
+        assert r.wait_ready(timeout=300)
+        g = r.submit({"prompt": [1, 2, 3], "max_tokens": 4})
+        st = r.wait(g, timeout=300)
+        assert st.status == "error"                    # resolved, not hung
+        s = r.stats()
+        assert s["replicas_live"] == 0 and s["lost"] >= 1
+        assert not r.healthy
+        assert r.pending() == 0
+        with pytest.raises(RuntimeError, match="every replica is dead"):
+            r.submit({"prompt": [1], "max_tokens": 1})
+    finally:
+        r.close()
+
+
+# ---------------------------------------------------------------------------
+# prefix affinity: stickiness, prefix-cache hits, load-based spill
+# ---------------------------------------------------------------------------
+
+def test_prefix_affinity_sticks_and_spills(artifact):
+    # paged engines so the replica that attracts the same-prefix session
+    # actually converts stickiness into prefix-cache hits
+    kw = dict(ENGINE_KW, paged=True, page_size=8)
+    r = EngineRouter(artifact, replicas=2, routing="prefix_affinity",
+                     engine_kwargs=kw)
+    try:
+        assert r.wait_ready(timeout=300)
+        assert r.affinity_page_size == 8               # follows the engines
+        same = {"prompt": list(range(1, 17)), "max_tokens": 2}
+
+        # sequential same-prefix session: every request sticks to the
+        # rendezvous favorite (no load, no reason to spill)
+        reps = set()
+        for _ in range(3):
+            g = r.submit(dict(same))
+            st = r.wait(g, timeout=300)
+            assert st.status == "ok"
+            reps.add(st.replica)
+        assert len(reps) == 1                          # sticky
+        fav = reps.pop()
+        s = r.stats()
+        assert s["affinity_hits"] == 3 and s["spills"] == 0
+        # stickiness pays: the favorite's prefix cache served the repeats
+        assert s["per_replica"][str(fav)]["prefix_hits"] > 0
+        other = 1 - fav
+        assert s["per_replica"][str(other)]["routed"] == 0
+
+        # saturate the favorite: a same-prefix burst beyond n_slots must
+        # spill to the strictly-less-loaded survivor instead of queueing
+        grids = [r.submit(dict(same)) for _ in range(2 * kw["n_slots"])]
+        states = [r.wait(g, timeout=300) for g in grids]
+        assert all(st.status == "ok" for st in states)
+        s = r.stats()
+        assert s["spills"] >= 1
+        assert s["affinity_hits"] + s["spills"] == 3 + len(grids)
+    finally:
+        r.close()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle odds and ends
+# ---------------------------------------------------------------------------
+
+def test_router_cancel_and_abort_pending(artifact):
+    r = EngineRouter(artifact, replicas=2, engine_kwargs=ENGINE_KW)
+    try:
+        assert r.wait_ready(timeout=300)
+        g = r.submit({"prompt": [1, 2, 3], "max_tokens": 50})
+        assert r.cancel(g) is True
+        assert r.wait(g, timeout=300).status == "cancelled"
+        assert r.cancel(g) is False                    # already terminal
+        assert r.cancel(999) is False                  # unknown grid
+        # validation happens at the router boundary, not in a worker
+        with pytest.raises(ValueError, match="priority must be an int"):
+            r.submit({"prompt": [1], "priority": "high"})
+        g2 = r.submit({"prompt": [4, 5, 6], "max_tokens": 50})
+        assert r.abort_pending() >= 1
+        assert r.wait(g2, timeout=60).status == "error"
+        assert r.pending() == 0
+    finally:
+        r.close()

@@ -96,6 +96,12 @@ def test_routes_and_blocking_generate(small):
         code, body = await _http(p, "POST", "/generate", {"prompt": "bad"})
         assert code == 400 and b"list of ints" in body
         code, body = await _http(p, "POST", "/generate",
+                                 {"prompt": [1], "priority": "high"})
+        assert code == 400 and b"priority must be an int" in body
+        code, body = await _http(p, "POST", "/generate",
+                                 {"prompt": [1], "deadline_s": "soon"})
+        assert code == 400 and b"deadline_s must be a number" in body
+        code, body = await _http(p, "POST", "/generate",
                                  {"prompt": [1, 2, 3], "max_tokens": 3})
         assert code == 200
         resp = json.loads(body)
@@ -269,3 +275,22 @@ def test_metrics_text_numeric_only():
     assert "lutnn_serving_b 2.5" in text
     assert "# TYPE lutnn_serving_a gauge" in text
     assert "skip" not in text and "flag" not in text
+
+
+def test_metrics_text_per_replica_labels():
+    # EngineRouter stats carry a per_replica sub-dict: rendered as labelled
+    # lutnn_replica_* gauges, one TYPE line per metric family
+    text = metrics_text({
+        "routed": 3,
+        "per_replica": {
+            "0": {"routed": 2, "queue_depth": 1, "backend": "supervised"},
+            "1": {"routed": 1, "queue_depth": 0},
+        },
+    })
+    assert "lutnn_serving_routed 3" in text
+    assert 'lutnn_replica_routed{replica="0"} 2' in text
+    assert 'lutnn_replica_routed{replica="1"} 1' in text
+    assert 'lutnn_replica_queue_depth{replica="0"} 1' in text
+    assert text.count("# TYPE lutnn_replica_routed gauge") == 1
+    assert "backend" not in text                  # strings never render
+    assert "per_replica " not in text             # the dict itself is not a gauge

@@ -192,6 +192,30 @@ def test_submit_from_spec_validation(small):
     assert done[rid].ok and len(done[rid].out_tokens) == 2
 
 
+def test_validate_spec_rejects_bad_priority_and_deadline():
+    # engine-free validation: bad types surface here (-> HTTP 400) instead
+    # of a confusing failure deep in admission, or a worker crash loop on
+    # the far side of the supervisor pipe
+    from repro.serving.engine import validate_spec
+
+    validate_spec({"prompt": [1, 2], "priority": 3, "deadline_s": 1.5})
+    validate_spec({"prompt": [1, 2], "priority": None, "deadline_s": None})
+    with pytest.raises(ValueError, match="priority must be an int"):
+        validate_spec({"prompt": [1], "priority": "high"})
+    with pytest.raises(ValueError, match="priority must be an int"):
+        validate_spec({"prompt": [1], "priority": 1.5})
+    with pytest.raises(ValueError, match="priority must be an int"):
+        validate_spec({"prompt": [1], "priority": True})  # bools are not ints
+    with pytest.raises(ValueError, match="deadline_s must be a number"):
+        validate_spec({"prompt": [1], "deadline_s": "soon"})
+    with pytest.raises(ValueError, match="deadline_s must be a number"):
+        validate_spec({"prompt": [1], "deadline_s": True})
+    with pytest.raises(ValueError, match="spec_decode must be a bool"):
+        validate_spec({"prompt": [1], "spec_decode": 1})
+    with pytest.raises(ValueError, match="JSON object"):
+        validate_spec([1, 2, 3])
+
+
 # ---------------------------------------------------------------------------
 # TokenTap
 # ---------------------------------------------------------------------------

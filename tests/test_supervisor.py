@@ -106,3 +106,58 @@ def test_crash_loop_exhausts_restarts_and_fails(artifact):
             sup.submit({"prompt": [1], "max_tokens": 1})
     finally:
         sup.close()
+
+
+def test_missing_artifact_fails_closed_immediately(tmp_path):
+    # no crash-loop burning max_restarts against a directory that cannot be
+    # served: the pre-spawn probe fails closed with an actionable error
+    sup = EngineSupervisor(tmp_path / "nope", max_restarts=50)
+    try:
+        assert sup.wait_ready(timeout=60)         # unblocked, not hung
+        assert not sup.healthy
+        assert sup.stats()["spawns"] == 0         # never even spawned
+        with pytest.raises(RuntimeError, match="not serveable"):
+            sup.submit({"prompt": [1], "max_tokens": 1})
+    finally:
+        sup.close()
+
+
+def test_artifact_vanishing_between_restarts_fails_closed(artifact, tmp_path):
+    # the router multiplies how often the restart path runs: a worker crash
+    # with the artifact gone must resolve every rid as "error" after ONE
+    # failed probe, not spin through max_restarts respawn attempts
+    import shutil
+
+    copy = tmp_path / "artifact"
+    shutil.copytree(artifact, copy)
+    sup = EngineSupervisor(
+        copy, engine_kwargs=ENGINE_KW,
+        faults=FaultSpec(kill_at_step=1), max_restarts=50,
+    )
+    try:
+        assert sup.wait_ready(timeout=300)
+        g = sup.submit({"prompt": [1, 2, 3], "max_tokens": 8})
+        shutil.rmtree(copy)          # gone before the injected crash restarts
+        st = sup.wait(g, timeout=300)
+        assert st.status == "error"
+        assert not sup.healthy
+        assert sup.pending() == 0
+        assert sup.stats()["spawns"] == 1         # no respawn against the void
+        with pytest.raises(RuntimeError, match="not serveable"):
+            sup.submit({"prompt": [1], "max_tokens": 1})
+    finally:
+        sup.close()
+
+
+def test_check_artifact_dir_probe(artifact, tmp_path):
+    from repro.serving.artifact import check_artifact_dir
+
+    manifest = check_artifact_dir(artifact)
+    assert isinstance(manifest, dict)
+    with pytest.raises(FileNotFoundError):
+        check_artifact_dir(tmp_path / "absent")
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{not json")
+    with pytest.raises(ValueError, match="manifest"):
+        check_artifact_dir(bad)
